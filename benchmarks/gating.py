@@ -1,0 +1,68 @@
+"""Gate quality benchmark: intent accuracy, fallback rate, gate overhead,
+and sensitivity of the token savings to classifier accuracy (the paper's
+"fully GPT-driven ... revert to the full toolset" robustness claim).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.agent import Agent
+from repro.core.gate import IntentGate, ScriptedIntentClassifier, \
+    keyword_intent
+from repro.core.intents import build_intent_map
+from repro.core.planner import PlannerConfig
+from repro.core.tools import DEFAULT_REGISTRY
+from repro.env.evaluator import evaluate
+from repro.env.tasks import make_benchmark
+from repro.env.world import build_world
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run(n_tasks: int = 160, seed: int = 0):
+    world = build_world(seed)
+    tasks = make_benchmark(world, n_tasks, seed=seed)
+    imap = build_intent_map(tasks, DEFAULT_REGISTRY)
+    cfg = PlannerConfig(mode="cot", few_shot=False)
+    base = evaluate(Agent(DEFAULT_REGISTRY, world, cfg, gate=None,
+                          seed=seed), tasks, "base")
+
+    kw_acc = float(np.mean([keyword_intent(t.query) == t.intent
+                            for t in tasks]))
+    sweep = {}
+    for acc in (1.0, 0.97, 0.90, 0.75, 0.50):
+        gate = IntentGate(imap, ScriptedIntentClassifier(
+            acc, np.random.default_rng(seed)), DEFAULT_REGISTRY.libraries())
+        r = evaluate(Agent(DEFAULT_REGISTRY, world, cfg, gate=gate,
+                           seed=seed), tasks, f"acc={acc}")
+        sweep[acc] = {
+            "token_reduction_pct": round(
+                100 * (1 - r.tokens_per_task / base.tokens_per_task), 2),
+            "success_delta_pp": round(
+                100 * (r.success_rate - base.success_rate), 2),
+            "fallback_rate_pct": round(100 * r.fallback_rate, 2),
+            "gate_tokens": round(r.gate_tokens, 1),
+        }
+    out = {"keyword_classifier_accuracy": round(100 * kw_acc, 2),
+           "sweep": sweep}
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "gating.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main():
+    out = run()
+    print(f"keyword intent accuracy: {out['keyword_classifier_accuracy']}%")
+    for acc, rec in out["sweep"].items():
+        print(f"  gate acc {acc}: tokens -{rec['token_reduction_pct']}%, "
+              f"success {rec['success_delta_pp']:+}pp, "
+              f"fallback {rec['fallback_rate_pct']}%")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Per-op breakdown of collectives + HBM traffic for one pair.
+
+Usage: PYTHONPATH=src python -m benchmarks.hlo_breakdown <arch> <shape> [perf-spec] [strategy k=v,...]
+"""
+import re
+import sys
+from collections import defaultdict
+
+from repro.common.perf import PerfFlags, set_flags
+from repro.launch import dryrun as dr
+from repro.launch import hlo_stats as hs
+from repro.common.config import INPUT_SHAPES
+from repro.configs import get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+
+import jax
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+perf = sys.argv[3] if len(sys.argv) > 3 else ""
+strat_spec = sys.argv[4] if len(sys.argv) > 4 else ""
+set_flags(PerfFlags().apply_overrides(perf))
+
+strategy = shd.ShardingStrategy()
+if strat_spec:
+    kw = {}
+    for kv in strat_spec.split(","):
+        k, v = kv.split("=")
+        cur = getattr(strategy, k)
+        kw[k] = (v == "True") if isinstance(cur, bool) else type(cur)(v)
+    strategy = strategy.replace(**kw)
+
+cache = ("/tmp/hlo_" + "_".join([arch, shape_name, perf, strat_spec])
+         .replace("/", "-").replace(",", "+") + ".txt")
+if os.path.exists(cache):
+    text = open(cache).read()
+    n_dev = 256
+    print(f"(cached HLO: {cache})")
+else:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    fn, args, in_sh, out_sh = dr.build_lowerable(cfg, shape, mesh, strategy)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        compiled = jitted.lower(*args).compile()
+    mem = compiled.memory_analysis()
+    print(f"temp GiB: {mem.temp_size_in_bytes/2**30:.1f}  "
+          f"args GiB: {mem.argument_size_in_bytes/2**30:.1f}")
+    text = compiled.as_text()
+    with open(cache, "w") as f:
+        f.write(text)
+    n_dev = mesh.devices.size
+
+comps, mult = hs.computation_multipliers(text)
+
+# ---- collectives per op, with multiplier ----
+rows = []
+for name, lines in comps.items():
+    if name != "__entry__" and lines is comps.get("__entry__"):
+        continue
+    m = mult.get(name, 1.0) or 1.0
+    for ln in lines:
+        kind = next((c for c in hs._COLLECTIVES
+                     if re.search(rf"\b{c}(-start|-done)?\(", ln)), None)
+        if kind is None or f"{kind}-done(" in ln:
+            continue
+        lhs = ln.split(f" {kind}")[0]
+        size = hs._shape_bytes(lhs)
+        if size == 0:
+            continue
+        g = hs._group_size(ln, n_dev)
+        if g <= 1:
+            continue
+        if kind == "all-gather":
+            moved = size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            moved = size * (g - 1)
+        elif kind == "all-reduce":
+            moved = 2 * size * (g - 1) / g
+        elif kind == "all-to-all":
+            moved = size * (g - 1) / g
+        else:
+            moved = size
+        shp = lhs.split("=")[1].strip() if "=" in lhs else lhs
+        rows.append((moved * m, kind, g, m, shp[:90], name[:40]))
+rows.sort(reverse=True)
+print("\n=== top collectives (moved bytes x trips) ===")
+tot = sum(r[0] for r in rows)
+print(f"total: {tot/2**30:.1f} GiB over {len(rows)} ops")
+for mv, kind, g, m, shp, comp in rows[:25]:
+    print(f"{mv/2**30:9.2f} GiB  {kind:20s} g={g:<4d} trips={m:<6.0f} {shp}  [{comp}]")
+
+# ---- HBM traffic per op kind ----
+traffic = defaultdict(float)
+fusion_called = set()
+for lines in comps.values():
+    for ln in lines:
+        for k, callee in hs._callees(ln):
+            if k in ("to_apply", "call"):
+                fusion_called.add(callee)
+big = []
+for name, lines in comps.items():
+    m = mult.get(name, 0.0)
+    if m == 0.0 or name in fusion_called:
+        continue
+    if name != "__entry__" and lines is comps.get("__entry__"):
+        continue
+    table = hs._shape_table(lines)
+    for ln in lines:
+        op = hs._instr_op(ln)
+        if not op or op in hs._SKIP_OPS:
+            continue
+        out_b = hs._out_shape_bytes(ln)
+        in_b = sum(hs._shape_bytes(table.get(o, "")) for o in hs._operands(ln))
+        b = (out_b + in_b) * m
+        traffic[op] += b
+        big.append((b, op, ln[:110], name[:40]))
+print("\n=== HBM traffic by op kind ===")
+for op, b in sorted(traffic.items(), key=lambda kv: -kv[1])[:12]:
+    print(f"{b/2**40:9.2f} TiB  {op}")
+big.sort(reverse=True)
+print("\n=== top instructions by traffic ===")
+for b, op, ln, comp in big[:20]:
+    print(f"{b/2**40:8.3f} TiB  {op:12s} {ln}  [{comp}]")
+
+# ---- traffic grouped by output shape (finds spread-out cost) ----
+by_shape = defaultdict(float)
+cnt = defaultdict(int)
+for b, op, ln, comp in big:
+    rhs = ln.split("=", 1)[1].strip() if "=" in ln else ""
+    m2 = re.match(r"((\([^)]*\))|[\w\[\],\.]+)", rhs)
+    shp = m2.group(1)[:70] if m2 else "?"
+    by_shape[(op, shp)] += b
+    cnt[(op, shp)] += 1
+print("\n=== traffic grouped by (op, out-shape) ===")
+for (op, shp), b in sorted(by_shape.items(), key=lambda kv: -kv[1])[:25]:
+    print(f"{b/2**40:8.3f} TiB  n={cnt[(op,shp)]:<5d} {op:12s} {shp}")

@@ -1,0 +1,69 @@
+"""Compare roofline terms between dry-run records (baseline vs perf tags).
+
+Usage: PYTHONPATH=src python -m benchmarks.perf_compare <arch> <shape> [tags...]
+Prints one row per tag (baseline = untagged record) with the three roofline
+terms and deltas vs baseline — the measurement step of each §Perf iteration.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.roofline import (DRYRUN_DIR, HBM_BW, ICI_BW, PEAK_FLOPS,
+                                 model_flops_per_chip)
+
+
+def terms(rec):
+    flops = rec["profile"]["flops_scaled"]
+    hbm = rec["profile"]["bytes_scaled"]
+    coll = rec["collectives"]["collective_bytes"]
+    return {
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": hbm / HBM_BW,
+        "t_collective": coll / ICI_BW,
+        "temp_gib": rec["memory"].get("temp_size_in_bytes", 0) / 2**30,
+        "flops": flops,
+        "useful": (model_flops_per_chip(rec["arch"], rec["shape"],
+                                        rec["n_devices"]) / max(flops, 1)),
+    }
+
+
+def load(arch, shape, tag=""):
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__single{suffix}.json")
+    with open(path) as f:
+        rec = json.load(f)
+    assert rec["status"] == "ok", (path, rec.get("error", "")[:200])
+    return rec
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    tags = sys.argv[3:] or [""]
+    base = terms(load(arch, shape))
+    print(f"{arch} × {shape}  (single-pod 16x16)")
+    hdr = (f"{'tag':16s} {'compute s':>11s} {'memory s':>11s} "
+           f"{'collect s':>11s} {'bottleneck s':>13s} {'temp GiB':>9s} "
+           f"{'useful':>7s}")
+    print(hdr)
+
+    def row(name, t):
+        dom = max(t["t_compute"], t["t_memory"], t["t_collective"])
+        print(f"{name:16s} {t['t_compute']:11.3g} {t['t_memory']:11.3g} "
+              f"{t['t_collective']:11.3g} {dom:13.3g} {t['temp_gib']:9.1f} "
+              f"{t['useful']:7.3f}")
+        return dom
+
+    dom0 = row("baseline", base)
+    for tag in tags:
+        if not tag:
+            continue
+        t = terms(load(arch, shape, tag))
+        dom = row(tag, t)
+        print(f"{'':16s} bottleneck delta vs baseline: "
+              f"{(1 - dom / dom0) * 100:+.1f}% reduction")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Per (arch × shape) on the single-pod mesh:
+  compute term    = per-chip HLO FLOPs (trip-count-scaled) / 197 TFLOP/s
+  memory term     = per-chip HBM-traffic model bytes / 819 GB/s
+  collective term = per-chip collective bytes / 50 GB/s ICI
+
+plus MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference) and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs. Reads results/dryrun/*.json
+written by repro.launch.dryrun; writes results/roofline.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.common.config import INPUT_SHAPES
+from repro.configs import ARCH_IDS, get_config
+from repro.models.model import count_active_params
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def model_flops_per_chip(arch: str, shape_name: str, n_chips: int) -> float:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_active = count_active_params(cfg)
+    if shape.mode == "train":
+        tokens = shape.seq_len * shape.global_batch
+        total = 6 * n_active * tokens
+    elif shape.mode == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        total = 2 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2 * n_active * shape.global_batch
+    return total / n_chips
+
+
+def analyze(mesh: str = "single", tag: str = ""):
+    suffix = f"__{tag}" if tag else ""
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            path = os.path.join(DRYRUN_DIR,
+                                f"{arch}__{shape}__{mesh}{suffix}.json")
+            if not os.path.exists(path):
+                rows.append({"arch": arch, "shape": shape,
+                             "status": "missing"})
+                continue
+            with open(path) as f:
+                rec = json.load(f)
+            if rec["status"] != "ok":
+                rows.append({"arch": arch, "shape": shape,
+                             "status": rec["status"],
+                             "reason": rec.get("reason", "")[:60]})
+                continue
+            n_chips = rec["n_devices"]
+            flops = rec["profile"]["flops_scaled"]
+            hbm = rec["profile"]["bytes_scaled"]
+            coll = rec["collectives"]["collective_bytes"]
+            t_c = flops / PEAK_FLOPS
+            t_m = hbm / HBM_BW
+            t_x = coll / ICI_BW
+            dom = max(("compute", t_c), ("memory", t_m),
+                      ("collective", t_x), key=lambda kv: kv[1])
+            mflops = model_flops_per_chip(arch, shape, n_chips)
+            rows.append({
+                "arch": arch, "shape": shape, "status": "ok",
+                "t_compute_s": t_c, "t_memory_s": t_m,
+                "t_collective_s": t_x, "dominant": dom[0],
+                "model_flops_per_chip": mflops,
+                "useful_ratio": mflops / max(flops, 1),
+                "args_gib": rec["memory"].get("argument_size_in_bytes",
+                                              0) / 2**30,
+                "temp_gib": rec["memory"].get("temp_size_in_bytes",
+                                              0) / 2**30,
+            })
+    return rows
+
+
+def to_markdown(rows):
+    md = ["| arch | shape | compute s | memory s | collective s | "
+          "dominant | useful ratio | args GiB/chip | temp GiB/chip |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            md.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                      f"{r['status']} | | | |")
+            continue
+        md.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.3f} | "
+            f"{r['args_gib']:.2f} | {r['temp_gib']:.1f} |")
+    return "\n".join(md)
+
+
+def delta_markdown(base_rows, prod_rows):
+    """Baseline vs production-profile comparison table."""
+    md = ["| arch | shape | bottleneck (base) | bottleneck (prod) | Δ | "
+          "temp GiB base→prod |",
+          "|---|---|---|---|---|---|"]
+    by_key = {(r["arch"], r["shape"]): r for r in prod_rows}
+    for b in base_rows:
+        if b["status"] != "ok":
+            continue
+        p = by_key.get((b["arch"], b["shape"]))
+        if not p or p["status"] != "ok":
+            md.append(f"| {b['arch']} | {b['shape']} | — | "
+                      f"{(p or {}).get('status', 'missing')} | | |")
+            continue
+        bdom = max(b["t_compute_s"], b["t_memory_s"], b["t_collective_s"])
+        pdom = max(p["t_compute_s"], p["t_memory_s"], p["t_collective_s"])
+        md.append(
+            f"| {b['arch']} | {b['shape']} | {bdom:.3g} s ({b['dominant']}) "
+            f"| {pdom:.3g} s ({p['dominant']}) | "
+            f"{(1 - pdom / bdom) * 100:+.1f}% | "
+            f"{b['temp_gib']:.0f}→{p['temp_gib']:.0f} |")
+    return "\n".join(md)
+
+
+def main():
+    rows = analyze("single")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    with open(os.path.join(RESULTS_DIR, "roofline.md"), "w") as f:
+        f.write(to_markdown(rows) + "\n")
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"roofline: {len(ok)} pairs analyzed")
+    for r in ok:
+        print(f"  {r['arch']:18s} {r['shape']:12s} dom={r['dominant']:10s} "
+              f"c={r['t_compute_s']:.3g}s m={r['t_memory_s']:.3g}s "
+              f"x={r['t_collective_s']:.3g}s useful={r['useful_ratio']:.3f}")
+    prod = analyze("single", tag="prod")
+    if any(r["status"] == "ok" for r in prod):
+        with open(os.path.join(RESULTS_DIR, "roofline_prod.json"), "w") as f:
+            json.dump(prod, f, indent=1)
+        with open(os.path.join(RESULTS_DIR, "roofline_prod.md"), "w") as f:
+            f.write(to_markdown(prod) + "\n\n## baseline vs prod\n\n")
+            f.write(delta_markdown(rows, prod) + "\n")
+        n_ok = sum(r["status"] == "ok" for r in prod)
+        print(f"prod profile: {n_ok} pairs analyzed "
+              f"-> results/roofline_prod.md")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

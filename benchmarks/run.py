@@ -1,0 +1,67 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,metric,value`` CSV lines and writes per-benchmark artifacts
+under results/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller task counts (CI mode)")
+    args = ap.parse_args()
+    n = 120 if args.fast else 400
+
+    from benchmarks import engine_bench, gating, roofline, steps_tools, \
+        table2
+
+    lines = []
+
+    t0 = time.time()
+    t2 = table2.main(n_tasks=n)
+    for name, rec in t2.items():
+        lines.append(f"table2,{name}_token_reduction_pct,"
+                     f"{rec['token_reduction_pct']}")
+        lines.append(f"table2,{name}_success_delta_pp,"
+                     f"{rec['success_delta_pct']}")
+    lines.append(f"table2,wall_s,{time.time()-t0:.1f}")
+
+    t0 = time.time()
+    st = steps_tools.main()
+    lines.append(f"steps_tools,step_reduction_pct,"
+                 f"{st['step_reduction_pct']}")
+    lines.append(f"steps_tools,tools_per_step_gain_pct,"
+                 f"{st['tools_per_step_gain_pct']}")
+    lines.append(f"steps_tools,wall_s,{time.time()-t0:.1f}")
+
+    t0 = time.time()
+    g = gating.main()
+    lines.append(f"gating,keyword_acc_pct,"
+                 f"{g['keyword_classifier_accuracy']}")
+    lines.append(f"gating,wall_s,{time.time()-t0:.1f}")
+
+    t0 = time.time()
+    eb = engine_bench.main()
+    lines.append(f"engine,decode_tok_per_s,{eb['decode_tok_per_s']}")
+    lines.append(f"engine,wall_s,{time.time()-t0:.1f}")
+
+    rl = roofline.main()
+    n_ok = sum(1 for r in rl if r["status"] == "ok")
+    n_skip = sum(1 for r in rl if r["status"] == "skipped")
+    lines.append(f"roofline,pairs_ok,{n_ok}")
+    lines.append(f"roofline,pairs_skipped,{n_skip}")
+
+    print("\n=== CSV ===")
+    for ln in lines:
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Fig-1 microbenchmark: multi-step×single-tool vs multi-step×multi-tool.
+
+Measures the paper's central mechanism: distribution of tool calls per
+LLM step with the full catalog vs the intent-gated catalog.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.agent import Agent
+from repro.core.gate import IntentGate, ScriptedIntentClassifier
+from repro.core.intents import build_intent_map
+from repro.core.planner import PlannerConfig
+from repro.core.tools import DEFAULT_REGISTRY
+from repro.env.tasks import make_benchmark
+from repro.env.world import build_world
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run(n_tasks: int = 200, seed: int = 0):
+    world = build_world(seed)
+    tasks = make_benchmark(world, n_tasks, seed=seed)
+    imap = build_intent_map(tasks, DEFAULT_REGISTRY)
+    gate = IntentGate(imap, ScriptedIntentClassifier(
+        0.97, np.random.default_rng(seed)), DEFAULT_REGISTRY.libraries())
+    cfg = PlannerConfig(mode="react", few_shot=False)
+
+    def profile(agent, label):
+        steps, tools, multi = [], [], 0
+        total_steps = 0
+        for i, t in enumerate(tasks):
+            res = agent.run_task(t, task_seed=i)
+            n_steps = res.ledger.n_plan_steps
+            steps.append(n_steps)
+            tools.append(len(res.executed_tools))
+            # count multi-tool steps from the per-step records
+            total_steps += n_steps
+        return {"label": label,
+                "steps_per_task": float(np.mean(steps)),
+                "tools_per_task": float(np.mean(tools)),
+                "tools_per_step": float(np.sum(tools) / max(1,
+                                                            np.sum(steps)))}
+
+    base = profile(Agent(DEFAULT_REGISTRY, world, cfg, gate=None,
+                         seed=seed), "full-catalog")
+    gk = profile(Agent(DEFAULT_REGISTRY, world, cfg, gate=gate, seed=seed),
+                 "geckopt-gated")
+    out = {"full": base, "gated": gk,
+           "step_reduction_pct": round(
+               100 * (1 - gk["steps_per_task"] / base["steps_per_task"]),
+               2),
+           "tools_per_step_gain_pct": round(
+               100 * (gk["tools_per_step"] / base["tools_per_step"] - 1),
+               2)}
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "steps_tools.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main():
+    out = run()
+    print(f"steps/task {out['full']['steps_per_task']:.2f} -> "
+          f"{out['gated']['steps_per_task']:.2f} "
+          f"(-{out['step_reduction_pct']}%), tools/step "
+          f"{out['full']['tools_per_step']:.2f} -> "
+          f"{out['gated']['tools_per_step']:.2f} "
+          f"(+{out['tools_per_step_gain_pct']}%)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Ablation: how the paper's trade-off moves with gate quality and
+intent-map granularity.
+
+Sweeps (a) classifier accuracy, (b) coverage quantile of the offline
+mining phase (narrower vs safer library sets), and reports token
+reduction vs success delta — the operating curve behind the paper's
+"negligible performance degradation within 1%" claim.
+
+  PYTHONPATH=src python examples/gating_ablation.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.agent import Agent
+from repro.core.gate import IntentGate, ScriptedIntentClassifier
+from repro.core.intents import build_intent_map
+from repro.core.planner import PlannerConfig
+from repro.core.tools import DEFAULT_REGISTRY
+from repro.env.evaluator import evaluate
+from repro.env.tasks import make_benchmark
+from repro.env.world import build_world
+
+
+def main():
+    world = build_world(0)
+    tasks = make_benchmark(world, 96)
+    corpus = make_benchmark(world, 256, seed=3)
+    cfg = PlannerConfig(mode="cot", few_shot=False)
+    base = evaluate(Agent(DEFAULT_REGISTRY, world, cfg, gate=None,
+                          seed=0), tasks, "base")
+    print(f"baseline: {base.tokens_per_task/1000:.2f}k tokens/task, "
+          f"success {100*base.success_rate:.1f}%\n")
+
+    print("=== sweep 1: gate accuracy (coverage_q=0.98) ===")
+    imap = build_intent_map(corpus, DEFAULT_REGISTRY, coverage_q=0.98)
+    for acc in (1.0, 0.97, 0.9, 0.75, 0.5):
+        gate = IntentGate(imap, ScriptedIntentClassifier(
+            acc, np.random.default_rng(0)), DEFAULT_REGISTRY.libraries())
+        r = evaluate(Agent(DEFAULT_REGISTRY, world, cfg, gate=gate,
+                           seed=0), tasks, f"acc{acc}")
+        red = 1 - r.tokens_per_task / base.tokens_per_task
+        print(f"  acc={acc:4.2f}: -{100*red:5.1f}% tokens, success "
+              f"{100*(r.success_rate-base.success_rate):+5.1f}pp, "
+              f"fallback {100*r.fallback_rate:4.1f}%")
+
+    print("\n=== sweep 2: offline-mining coverage quantile ===")
+    for q in (0.999, 0.98, 0.9, 0.75):
+        imap = build_intent_map(corpus, DEFAULT_REGISTRY, coverage_q=q)
+        n_libs = np.mean([len(v) for v in imap.intent_to_libs.values()])
+        gate = IntentGate(imap, ScriptedIntentClassifier(
+            0.97, np.random.default_rng(0)), DEFAULT_REGISTRY.libraries())
+        r = evaluate(Agent(DEFAULT_REGISTRY, world, cfg, gate=gate,
+                           seed=0), tasks, f"q{q}")
+        red = 1 - r.tokens_per_task / base.tokens_per_task
+        print(f"  q={q:5.3f} (avg {n_libs:.1f} libs/intent): "
+              f"-{100*red:5.1f}% tokens, success "
+              f"{100*(r.success_rate-base.success_rate):+5.1f}pp, "
+              f"fallback {100*r.fallback_rate:4.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Global performance flags — the §Perf hillclimb knobs.
+
+Defaults = paper-faithful baseline. The dry-run CLI overrides them with
+``--perf k=v,k=v`` so every EXPERIMENTS.md §Perf iteration is a recorded,
+reproducible configuration, not a code fork.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass
+class PerfFlags:
+    # selective-scan (mamba) chunking: smaller chunks bound the
+    # (B, chunk, d_inner, n) associative-scan temporaries
+    ssm_scan_chunk: int = 512
+    # dtype of the intra-chunk scan elements (carry stays fp32)
+    ssm_scan_dtype: str = "float32"
+    # dtype of attention probabilities in the jnp (GSPMD) attention path
+    attn_probs_dtype: str = "float32"
+    # MoE dispatch algorithm: "einsum" (GShard one-hot) | "gather"
+    moe_dispatch: str = "einsum"
+    # attention q-chunk length in the jnp path
+    attn_chunk: int = 1024
+    # in-graph sharding constraints for attention q/k/v/out ("off"|"auto"):
+    # pins batch/head layout when head counts don't divide the model axis
+    # (GSPMD otherwise replicates attention at global batch — see
+    # EXPERIMENTS.md §Perf hymba-train iteration 1)
+    attn_constraint: str = "off"
+    # rematerialize per-q-chunk attention probs in backward instead of
+    # saving the stacked (n_blk, B, H, Cq, Sk) logits ("off"|"on")
+    attn_chunk_remat: str = "off"
+    # GShard-canonical sharding pins on the MoE dispatch/combine einsums
+    # ("off"|"auto"): expert buffers (E,B,C,d) -> (model, data, -, -),
+    # dispatch masks (B,S,E,C) -> (data, -, model, -). Lowers token
+    # exchange to all-to-all instead of GSPMD's all-reduce fallback.
+    moe_constraint: str = "off"
+    # override the per-arch MoE capacity factor (0.0 = use the config's);
+    # dispatch/one-hot/expert-buffer sizes all scale linearly with it
+    moe_capacity_factor: float = 0.0
+    # sliding-window layers: slice K/V to a (window+chunk) band per q-chunk
+    # instead of masking full-length logits ("off"|"on") — cuts logits
+    # traffic by Sk/(window+chunk) on local-attention layers
+    attn_window_slice: str = "off"
+
+    def apply_overrides(self, spec: str) -> "PerfFlags":
+        """'ssm_scan_chunk=128,moe_dispatch=gather' -> new flags."""
+        out = self
+        if not spec:
+            return out
+        for kv in spec.split(","):
+            k, v = kv.split("=")
+            cur = getattr(self, k.strip())
+            val = v.strip()
+            if isinstance(cur, bool):
+                val = val == "True"
+            elif isinstance(cur, int):
+                val = int(v)
+            elif isinstance(cur, float):
+                val = float(v)
+            out = dataclasses.replace(out, **{k.strip(): val})
+        return out
+
+
+FLAGS = PerfFlags()
+
+
+def set_flags(flags: PerfFlags):
+    global FLAGS
+    FLAGS = flags
+
+
+def get_flags() -> PerfFlags:
+    return FLAGS

@@ -1,0 +1,37 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the FULL assigned config (exercised only via
+the dry-run); ``get_smoke_config(name)`` returns the reduced same-family
+variant used by CPU smoke tests (<=2-ish layers, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "hymba-1.5b",
+    "arctic-480b",
+    "xlstm-125m",
+    "starcoder2-3b",
+    "qwen2-vl-72b",
+    "whisper-large-v3",
+    "qwen1.5-32b",
+    "gemma2-2b",
+    "kimi-k2-1t-a32b",
+    "qwen1.5-110b",
+)
+
+ALL_IDS = ARCH_IDS + ("planner-proxy-100m",)
+
+
+def _module(name: str):
+    mod = name.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str):
+    return _module(name).SMOKE

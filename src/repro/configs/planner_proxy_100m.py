@@ -1,0 +1,36 @@
+"""planner-proxy-100m — the ~100M-param dense model the end-to-end examples
+actually train and serve on CPU as the GeckOpt planner/intent-classifier.
+
+Not part of the assigned pool; sized so a few hundred train steps run on
+this container.
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="planner-proxy-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    d_head=64,
+    d_ff=2048,
+    vocab_size=8192,
+    segments=((("full",), 12),),
+    tie_embeddings=True,
+)
+
+# An even smaller variant for tests / quick examples.
+SMOKE = ModelConfig(
+    name="planner-proxy-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=64,
+    d_ff=512,
+    vocab_size=8192,
+    segments=((("full",), 2),),
+    tie_embeddings=True,
+)

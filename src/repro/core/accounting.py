@@ -1,0 +1,55 @@
+"""Token & request accounting — the paper's cost metric.
+
+Every LLM interaction (the gate call and each planner step) is recorded
+with REAL token counts from the serialized prompt/completion text
+(serving.tokenizer), not estimates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from repro.serving.tokenizer import count_tokens
+
+
+@dataclass
+class LedgerEntry:
+    kind: str              # "gate" | "plan"
+    prompt_tokens: int
+    completion_tokens: int
+
+
+@dataclass
+class TokenLedger:
+    entries: List[LedgerEntry] = field(default_factory=list)
+
+    def record(self, kind: str, prompt_text: str, completion_text: str):
+        self.entries.append(LedgerEntry(
+            kind, count_tokens(prompt_text), count_tokens(completion_text)))
+
+    @property
+    def prompt_tokens(self) -> int:
+        return sum(e.prompt_tokens for e in self.entries)
+
+    @property
+    def completion_tokens(self) -> int:
+        return sum(e.completion_tokens for e in self.entries)
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prompt_tokens + self.completion_tokens
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.entries)
+
+    @property
+    def n_plan_steps(self) -> int:
+        return sum(1 for e in self.entries if e.kind == "plan")
+
+    def summary(self) -> Dict[str, float]:
+        return {"total_tokens": self.total_tokens,
+                "prompt_tokens": self.prompt_tokens,
+                "completion_tokens": self.completion_tokens,
+                "requests": self.n_requests,
+                "plan_steps": self.n_plan_steps}

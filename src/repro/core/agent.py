@@ -1,0 +1,116 @@
+"""The multi-step agent loop: (optional GeckOpt gate) → planner → tools.
+
+Implements the paper's runtime exactly:
+  1. with gating on, one extra LLM call classifies intent and narrows the
+     catalog to the mapped libraries;
+  2. compositional planning proceeds over the (possibly narrowed) catalog,
+     each step = one LLM request whose prompt carries the serialized
+     catalog + history (all token-counted for real);
+  3. fallback: if the planner reports TOOL_NOT_FOUND (the gate was too
+     narrow), the agent reverts to the FULL toolset for this task and
+     continues — "the agent being instructed via prompting to revert".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.accounting import TokenLedger
+from repro.core.gate import IntentGate
+from repro.core.planner import PlannerConfig, PlanStep, ScriptedPlanner
+from repro.core.tools import ToolRegistry
+from repro.env.tasks import Task
+from repro.env.tools_impl import ToolError, Workspace, execute_tool
+from repro.env.world import World
+
+
+@dataclass
+class TaskResult:
+    task: Task
+    workspace: Workspace
+    ledger: TokenLedger
+    completed_plan: bool
+    fallback_used: bool
+    intent_predicted: Optional[str]
+    steps: int
+    executed_tools: List[str] = field(default_factory=list)
+
+
+class Agent:
+    def __init__(self, registry: ToolRegistry, world: World,
+                 planner_cfg: PlannerConfig,
+                 gate: Optional[IntentGate] = None, seed: int = 0):
+        self.registry = registry
+        self.world = world
+        self.planner_cfg = planner_cfg
+        self.gate = gate
+        self.seed = seed
+
+    def run_task(self, task: Task, task_seed: int = 0) -> TaskResult:
+        rng = np.random.default_rng(hash((self.seed, task_seed)) % 2**32)
+        ws = Workspace(world=self.world, rng=rng,
+                       temperature=self.planner_cfg.temperature)
+        ledger = TokenLedger()
+        planner = ScriptedPlanner(self.planner_cfg, self.registry,
+                                  seed=int(rng.integers(0, 2**31)))
+        planner.start_task(task)
+
+        intent = None
+        fallback_used = False
+        if self.gate is not None:
+            intent, libs = self.gate(task.query, ledger)
+            visible = {t.name: t for t in self.registry.by_library(libs)}
+            catalog = self.registry.catalog_text(libs)
+        else:
+            visible = dict(self.registry.tools)
+            catalog = self.registry.catalog_text()
+
+        history: List[str] = []
+        executed: List[str] = []
+        completed = False
+        steps = 0
+        while steps < self.planner_cfg.max_steps:
+            steps += 1
+            prompt = planner.serialize_prompt(task, catalog, history)
+            step = planner.next_step(task, visible, history)
+            ledger.record("plan", prompt, planner.serialize_completion(step))
+
+            if step.tool_not_found and self.gate is not None and \
+                    not fallback_used:
+                # GeckOpt fallback: revert to the full toolset
+                fallback_used = True
+                visible = dict(self.registry.tools)
+                catalog = self.registry.catalog_text()
+                planner.note_fallback()
+                history.append("Observation: TOOL_NOT_FOUND — reverting to "
+                               "the full tool catalog.")
+                continue
+            if step.final is not None:
+                completed = True
+                break
+            if not step.calls:
+                history.append("Observation: (no action)")
+                continue
+            obs_parts = []
+            for call in step.calls:
+                try:
+                    out = execute_tool(ws, call.tool, call.args)
+                    executed.append(call.tool)
+                    obs_parts.append(f"{call.tool} -> {out}")
+                except ToolError as e:
+                    obs_parts.append(f"{call.tool} -> ERROR: {e}")
+            history.append("Observation: " + " | ".join(obs_parts))
+            history.append(
+                f"Workspace: {len(ws.handles)} handles loaded, "
+                f"{len(ws.map_layers)} map layers, "
+                f"{len(ws.detections)} detection sets, "
+                f"{len(ws.artifacts)} artifacts; last tools: "
+                f"{', '.join(executed[-4:]) or 'none'}")
+
+        return TaskResult(task=task, workspace=ws, ledger=ledger,
+                          completed_plan=completed,
+                          fallback_used=fallback_used,
+                          intent_predicted=intent, steps=steps,
+                          executed_tools=executed)

@@ -1,0 +1,237 @@
+"""Logical-axis -> mesh-axis sharding rules for params, optimizer state,
+batches and KV/state caches.
+
+Rules are *path-based* over the param pytree and guarded by divisibility:
+a tensor dim is only sharded over a mesh-axis tuple whose total size
+divides it, so odd head counts (qwen1.5-32b kv=40, whisper kv=20,
+hymba kv=5) degrade gracefully to replication instead of failing to lower.
+
+``ShardingStrategy`` exposes the knobs the §Perf hillclimb flips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class ShardingStrategy:
+    fsdp: bool = True                  # shard weight d_model dims over data
+    zero1: bool = True                 # shard optimizer m/v like fsdp
+    decode_cache_seq: str = "model"    # decode KV cache seq axis: model|data|both|none
+    shard_vocab: bool = True           # embed/lm_head vocab over model
+    batch_over_pod: bool = True        # fold pod axis into the batch axes
+    prefill_seq_axis: str = "none"     # shard prefill activations' seq dim
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def dp_axes(mesh: Mesh, strategy: ShardingStrategy) -> Tuple[str, ...]:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not strategy.batch_over_pod:
+        axes = tuple(a for a in axes if a != "pod")
+    return axes
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, axes):
+    """Return axes if dim divisible by their product, else progressively
+    drop trailing axes; None if nothing fits."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    while axes:
+        if dim % _axis_size(mesh, axes) == 0:
+            return axes if len(axes) > 1 else axes[0]
+        axes = axes[:-1]
+    return None
+
+
+def _spec(mesh, shape, *per_dim):
+    """Build a PartitionSpec applying _fit per dim."""
+    assert len(per_dim) == len(shape), (shape, per_dim)
+    return P(*[_fit(mesh, d, ax) for d, ax in zip(shape, per_dim)])
+
+
+# ----------------------------------------------------------------- params ----
+
+def param_spec(path_keys, leaf, cfg: ModelConfig, mesh: Mesh,
+               strategy: ShardingStrategy) -> P:
+    keys = path_keys
+    name = keys[-1] if keys else ""
+    shape = leaf.shape
+    dat = "data" if strategy.fsdp else None
+    mdl = "model"
+
+    def stacked(spec_tail):
+        """Prepend None for the layer-stack axis if leaf is stacked."""
+        extra = len(shape) - len(spec_tail)
+        return P(*([None] * extra + list(spec_tail)))
+
+    if name in ("embed", "lm_head"):
+        vocab_ax = mdl if strategy.shard_vocab else None
+        if name == "embed":
+            return _spec(mesh, shape, vocab_ax, dat)
+        return _spec(mesh, shape, dat, vocab_ax)
+    if name == "scale" or "norm" in name or name in ("b_gates", "dt_bias",
+                                                     "b_i", "b_f", "D"):
+        return P(*([None] * len(shape)))
+
+    # MoE expert weights: (R?, E, d, ff) — experts over model.
+    if "moe" in keys and name in ("w_gate", "w_up", "w_down"):
+        tail = [mdl, dat, None] if name != "w_down" else [mdl, None, dat]
+        return stacked(_spec(mesh, shape[-3:], *tail))
+    if "moe" in keys and name == "router":
+        return stacked(_spec(mesh, shape[-2:], dat, mdl))
+
+    two_d = {
+        # attention
+        "wq": (dat, mdl), "wk": (dat, mdl), "wv": (dat, mdl),
+        "wo": (mdl, dat),
+        # mlp
+        "w_gate": (dat, mdl), "w_up": (dat, mdl), "w_down": (mdl, dat),
+        # ssm
+        "in_proj": (dat, mdl), "w_bc": (mdl, None), "w_dt": (mdl, None),
+        "dt_proj": (None, mdl), "out_proj": (mdl, dat),
+        # xlstm
+        "up": (dat, mdl), "down": (mdl, dat), "w_gates": (dat, mdl),
+        "w_if": (mdl, None),
+    }
+    one_d = {"bq": mdl, "bk": mdl, "bv": mdl, "conv_b": mdl}
+    if name in two_d and len(shape) >= 2:
+        return stacked(_spec(mesh, shape[-2:], *two_d[name]))
+    if name in one_d and len(shape) >= 1:
+        return stacked(_spec(mesh, shape[-1:], one_d[name]))
+    if name == "conv_w":  # (R?, K, di)
+        return stacked(_spec(mesh, shape[-2:], None, mdl))
+    if name == "A_log":   # (R?, di, n)
+        return stacked(_spec(mesh, shape[-2:], mdl, None))
+    if name == "r_gates":  # (R?, H, hd, 4hd)
+        return stacked(_spec(mesh, shape[-3:], None, None, mdl))
+    return P(*([None] * len(shape)))
+
+
+def _tree_specs(tree, fn):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        keys = tuple(
+            str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+            for k in path)
+        specs.append(fn(keys, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def params_sharding(param_tree, cfg: ModelConfig, mesh: Mesh,
+                    strategy: ShardingStrategy):
+    return _tree_specs(
+        param_tree, lambda keys, leaf: NamedSharding(
+            mesh, param_spec(keys, leaf, cfg, mesh, strategy)))
+
+
+def opt_state_sharding(opt_tree, param_tree, cfg: ModelConfig, mesh: Mesh,
+                       strategy: ShardingStrategy):
+    """ZeRO-1: m/v take the fsdp spec even if params are model-only."""
+    st = strategy.replace(fsdp=strategy.fsdp or strategy.zero1)
+    def fn(keys, leaf):
+        if keys and keys[0] == "step" or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        # strip the leading "m"/"v" path element; rules key off names anyway
+        return NamedSharding(mesh, param_spec(keys, leaf, cfg, mesh, st))
+    return _tree_specs(opt_tree, fn)
+
+
+# ------------------------------------------------------------ batch/cache ----
+
+def batch_sharding(batch_tree, cfg: ModelConfig, shape: ShapeConfig,
+                   mesh: Mesh, strategy: ShardingStrategy):
+    dp = dp_axes(mesh, strategy)
+    # Sequence-parallel prefill (context parallelism): shard the prompt's
+    # seq dim over `prefill_seq_axis`; GSPMD all-gathers the (small, GQA)
+    # K/V heads inside attention instead of all-reducing TP activations.
+    sax = (strategy.prefill_seq_axis
+           if (shape.mode == "prefill"
+               and strategy.prefill_seq_axis != "none") else None)
+
+    def fn(keys, leaf):
+        name = keys[-1]
+        if name == "mrope_pos":        # (3, B, S)
+            bax = dp if leaf.shape[1] > 1 else None
+            return NamedSharding(mesh, _spec(mesh, leaf.shape, None, bax, sax))
+        bax = dp if leaf.shape[0] > 1 else None
+        if name in ("tokens", "labels"):
+            return NamedSharding(mesh, _spec(mesh, leaf.shape, bax, sax))
+        if name in ("frames", "patch_embeds"):
+            return NamedSharding(mesh, _spec(mesh, leaf.shape, bax, sax, None))
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+
+    return _tree_specs(batch_tree, fn)
+
+
+def cache_sharding(cache_tree, cfg: ModelConfig, shape: ShapeConfig,
+                   mesh: Mesh, strategy: ShardingStrategy):
+    dp = dp_axes(mesh, strategy)
+    seq_ax = {"model": ("model",), "data": ("data",),
+              "both": ("data", "model"), "none": None}[strategy.decode_cache_seq]
+    B = shape.global_batch
+    batch_sharded = B % _axis_size(mesh, dp) == 0 and B > 1
+
+    def fn(keys, leaf):
+        name = keys[-1]
+        shp = leaf.shape
+        if name == "pos" or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        bax = dp if batch_sharded else None
+        # Batch-sharded caches put seq on `model`; unsharded-batch (B=1,
+        # long_500k) caches can spread seq over every axis.
+        if batch_sharded:
+            sax = ("model",) if seq_ax is not None else None
+        else:
+            sax = seq_ax
+        if name in ("k", "v", "ck", "cv"):   # (R, B, Hkv, S, hd)
+            return NamedSharding(
+                mesh, _spec(mesh, shp, None, bax, None, sax, None))
+        if name == "h" and "ssm" in keys:    # (R, B, di, n)
+            return NamedSharding(mesh, _spec(mesh, shp, None, bax, "model",
+                                             None))
+        if name == "conv":                   # (R, B, K-1, di)
+            return NamedSharding(mesh, _spec(mesh, shp, None, bax, None,
+                                             "model"))
+        if "mlstm" in keys:                  # (R,B,H,hd[,hd]) fp32
+            rest = [None] * (leaf.ndim - 2)
+            return NamedSharding(mesh, _spec(mesh, shp, None, bax, *rest))
+        if "slstm" in keys:                  # (R,B,H,hd)
+            return NamedSharding(mesh, _spec(mesh, shp, None, bax, None, None))
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+
+    return _tree_specs(cache_tree, fn)
+
+
+def logits_sharding(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    strategy: ShardingStrategy):
+    dp = dp_axes(mesh, strategy)
+    B = shape.global_batch
+    bax = dp if (B % _axis_size(mesh, dp) == 0 and B > 1) else None
+    vax = "model" if (strategy.shard_vocab
+                      and cfg.vocab_size % mesh.shape["model"] == 0) else None
+    return NamedSharding(mesh, P(bax, vax))

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: the Pallas fast path runs on TPU (or under interpret=True
+for CPU validation); the distributed pjit paths use the jnp references so
+GSPMD can partition freely. ``set_kernel_mode`` flips the global default —
+tests sweep both.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.flash_prefill import flash_prefill as _flash_prefill
+from repro.kernels.moe_router import moe_router_topk as _moe_router
+from repro.kernels.ssm_scan import ssm_scan as _ssm_scan
+
+_MODE = "auto"          # auto | pallas | ref
+
+
+def set_kernel_mode(mode: str):
+    global _MODE
+    assert mode in ("auto", "pallas", "ref")
+    _MODE = mode
+
+
+def _use_pallas() -> bool:
+    if _MODE == "pallas":
+        return True
+    if _MODE == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def attention(q, k, v, *, causal=True, window=0, cap=0.0):
+    """Prefill/train attention. q: (B,Hq,S,hd); k,v: (B,Hkv,S,hd)."""
+    if _use_pallas():
+        return _flash_prefill(q, k, v, causal=causal, window=window,
+                              cap=cap, interpret=_interpret())
+    return ref.attention_ref(q, k, v, causal=causal, window=window, cap=cap)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, cap=0.0):
+    """Decode attention. q: (B,Hq,hd); caches (B,Hkv,S,hd)."""
+    if _use_pallas():
+        return _flash_decode(q, k_cache, v_cache, kv_len, cap=cap,
+                             interpret=_interpret())
+    return ref.decode_attention_ref(q, k_cache, v_cache, kv_len, cap=cap)
+
+
+def router_topk(logits, k: int):
+    """Router softmax+top-k. logits: (T,E)."""
+    if _use_pallas():
+        return _moe_router(logits, k, interpret=_interpret())
+    w, i, _ = ref.router_topk_ref(logits, k)
+    return w, i
+
+
+def selective_scan(dt, x, B_, C_, A):
+    """Selective SSM scan. Returns y (B,S,di) fp32."""
+    if _use_pallas():
+        return _ssm_scan(dt, x, B_, C_, A, interpret=_interpret())
+    y, _ = ref.selective_scan_ref(dt, x, B_, C_, A)
+    return y

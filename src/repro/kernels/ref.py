@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately naive (materialize the full score matrix, sequential
+scans) — correctness references, not fast paths.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, cap=0.0, kv_len=None):
+    """q: (B,Hq,Sq,hd); k,v: (B,Hkv,Sk,hd); GQA by head repetition.
+
+    window: sliding-window size (0 = full); cap: logit softcap;
+    kv_len: number of valid kv entries (decode against a partially filled
+    cache); q positions are assumed to end at kv_len-1 (decode) or to be
+    0..Sq-1 (prefill).
+    """
+    B, Hq, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if cap:
+        logits = cap * jnp.tanh(logits / cap)
+    kpos = jnp.arange(Sk)
+    if kv_len is not None:
+        qpos = kv_len - Sq + jnp.arange(Sq)
+        valid = kpos[None, :] < kv_len
+    else:
+        qpos = jnp.arange(Sq)
+        valid = jnp.ones((1, Sk), bool)
+    mask = valid
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window:
+        mask = mask & (qpos[:, None] - kpos[None, :] < window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len, *, cap=0.0):
+    """q: (B,Hq,hd); caches: (B,Hkv,S,hd); kv_len: scalar int."""
+    out = attention_ref(q[:, :, None], k_cache, v_cache, causal=False,
+                        cap=cap, kv_len=kv_len)
+    return out[:, :, 0]
+
+
+def router_topk_ref(logits, k: int):
+    """logits: (T,E) -> (weights (T,k), idx (T,k), probs (T,E))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    return w, idx.astype(jnp.int32), probs
+
+
+def selective_scan_ref(dt, x, B_, C_, A):
+    """Sequential selective-scan oracle.
+
+    dt, x: (B,S,di); B_, C_: (B,S,n); A: (di,n). Returns y (B,S,di) fp32
+    and final state h (B,di,n).
+    """
+    Bsz, S, di = x.shape
+    n = A.shape[-1]
+
+    def step(h, t):
+        dt_t, x_t, B_t, C_t = t
+        a = jnp.exp(dt_t[..., None] * A)              # (B,di,n)
+        h = a * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, di, n), jnp.float32)
+    xs = (dt.swapaxes(0, 1).astype(jnp.float32),
+          x.swapaxes(0, 1).astype(jnp.float32),
+          B_.swapaxes(0, 1).astype(jnp.float32),
+          C_.swapaxes(0, 1).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h
+
+
+def mlstm_ref(q, k, v, i_pre, f_pre):
+    """Sequential stabilized mLSTM oracle.
+
+    q,k,v: (B,H,S,hd) fp32; i_pre,f_pre: (B,H,S). Returns h (B,H,S,hd).
+    """
+    B, H, S, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+
+    def step(carry, t):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = t
+        logf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(logf + m, i_t)
+        fw = jnp.exp(logf + m - m_new)[..., None]
+        iw = jnp.exp(i_t - m_new)[..., None]
+        ks = k_t * scale
+        C = C * fw[..., None] + iw[..., None] * (ks[..., :, None]
+                                                 * v_t[..., None, :])
+        n = n * fw + iw * ks
+        num = jnp.einsum("bhde,bhd->bhe", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q_t)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    carry = (jnp.zeros((B, H, hd, hd), jnp.float32),
+             jnp.zeros((B, H, hd), jnp.float32),
+             jnp.full((B, H), -1e30, jnp.float32))
+    sw = lambda t: jnp.moveaxis(t, 2, 0)
+    _, hs = jax.lax.scan(step, carry, (sw(q), sw(k), sw(v),
+                                       sw(i_pre), sw(f_pre)))
+    return jnp.moveaxis(hs, 0, 2)

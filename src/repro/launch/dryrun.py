@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import (device count locks on first init).
+
+# Multi-pod dry-run: lower + compile every (architecture × input shape)
+# on the production meshes, record memory/cost/collective analysis.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+#       --shape train_4k --mesh single
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+#
+# Writes results/dryrun/<arch>__<shape>__<mesh>.json; EXPERIMENTS.md
+# §Dry-run and benchmarks/roofline.py read these files.
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.config import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed import sharding as shd
+from repro.launch.hlo_stats import collective_stats, hlo_profile
+from repro.launch.mesh import make_production_mesh
+from repro.models import inputs as inp
+from repro.models import model as mdl
+from repro.training.loop import make_train_step
+from repro.training.optimizer import adamw_init
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    if shape.name == "long_500k" and not cfg.long_context_ok:
+        return ("full-attention architecture: long_500k requires "
+                "sub-quadratic attention (DESIGN.md §Input-shape coverage)")
+    return ""
+
+
+def build_lowerable(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    strategy: shd.ShardingStrategy):
+    """Returns (fn, args_structs, in_shardings, out_shardings)."""
+    batch = inp.batch_struct(cfg, shape)
+    batch_sh = shd.batch_sharding(batch, cfg, shape, mesh, strategy)
+    pshapes = mdl.param_shapes(cfg)
+    params_sh = shd.params_sharding(pshapes, cfg, mesh, strategy)
+    logits_sh = shd.logits_sharding(cfg, shape, mesh, strategy)
+    repl = NamedSharding(mesh, P())
+
+    if shape.mode == "train":
+        opt_shapes = jax.eval_shape(adamw_init, pshapes)
+        opt_sh = shd.opt_state_sharding(opt_shapes, pshapes, cfg, mesh,
+                                        strategy)
+        step = make_train_step(cfg)
+        metrics_sh = {"loss": repl, "grad_norm": repl, "step": repl}
+        return (step, (pshapes, opt_shapes, batch),
+                (params_sh, opt_sh, batch_sh),
+                (params_sh, opt_sh, metrics_sh))
+
+    if shape.mode == "prefill":
+        cache_len = (mdl.WHISPER_DEC_CACHE if cfg.family == "audio"
+                     else shape.seq_len)
+        enc_len = shape.seq_len if cfg.family == "audio" else 0
+
+        seq_axis = (strategy.prefill_seq_axis
+                    if strategy.prefill_seq_axis != "none" else None)
+
+        def step(params, batch):
+            return mdl.prefill(params, cfg, batch, cache_len=cache_len,
+                               seq_axis=seq_axis)
+
+        cache_shapes = jax.eval_shape(
+            lambda: mdl.init_cache(cfg, shape.global_batch, cache_len,
+                                   enc_len))
+        cache_sh = shd.cache_sharding(cache_shapes, cfg, shape, mesh,
+                                      strategy)
+        return (step, (pshapes, batch), (params_sh, batch_sh),
+                (logits_sh, cache_sh))
+
+    # decode
+    cache_shapes = inp.cache_struct(cfg, shape)
+    cache_sh = shd.cache_sharding(cache_shapes, cfg, shape, mesh, strategy)
+
+    def step(params, cache, batch):
+        return mdl.decode_step(params, cfg, cache, batch)
+
+    return (step, (pshapes, cache_shapes, batch),
+            (params_sh, cache_sh, batch_sh), (logits_sh, cache_sh))
+
+
+def parse_strategy(spec: str) -> shd.ShardingStrategy:
+    """'prefill_seq_axis=model,fsdp=False' -> ShardingStrategy."""
+    strategy = shd.ShardingStrategy()
+    if not spec:
+        return strategy
+    kw = {}
+    for kv in spec.split(","):
+        k, v = (t.strip() for t in kv.split("="))
+        cur = getattr(strategy, k)
+        kw[k] = (v == "True") if isinstance(cur, bool) else type(cur)(v)
+    return strategy.replace(**kw)
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str,
+            strategy: shd.ShardingStrategy = None, save: bool = True,
+            verbose: bool = True, perf: str = "", tag: str = ""):
+    from repro.common.perf import PerfFlags, set_flags
+    set_flags(PerfFlags().apply_overrides(perf))
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    strategy = strategy or shd.ShardingStrategy()
+    reason = skip_reason(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "perf": perf, "tag": tag,
+           "strategy": strategy.__dict__ if strategy else {}}
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        _save(rec, save)
+        if verbose:
+            print(f"SKIP {arch} × {shape_name} × {mesh_name}: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh = build_lowerable(cfg, shape, mesh, strategy)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        rec["status"] = "ok"
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+        rec["memory"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        rec["cost"] = {k: float(v) for k, v in dict(cost or {}).items()
+                       if isinstance(v, (int, float))}
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_stats(hlo, n_dev)
+        rec["profile"] = hlo_profile(hlo, n_dev)
+        rec["n_devices"] = n_dev
+        if verbose:
+            mb = rec["memory"].get("argument_size_in_bytes", 0) / 2**30
+            tb = rec["memory"].get("temp_size_in_bytes", 0) / 2**30
+            fl = rec["profile"]["flops_scaled"]
+            by = rec["profile"]["bytes_scaled"]
+            cb = rec["collectives"]["collective_bytes"]
+            print(f"OK   {arch} × {shape_name} × {mesh_name}: "
+                  f"args={mb:.2f}GiB temp={tb:.2f}GiB flops={fl:.3e} "
+                  f"hbm={by/2**30:.1f}GiB coll={cb/2**30:.2f}GiB "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"FAIL {arch} × {shape_name} × {mesh_name}: "
+                  f"{rec['error'][:300]}")
+    _save(rec, save)
+    return rec
+
+
+def _save(rec, save):
+    if not save:
+        return
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = f"__{rec['tag']}" if rec.get("tag") else ""
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json"
+    with open(os.path.join(RESULTS_DIR, name), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--perf", default="",
+                    help="perf-flag overrides, e.g. "
+                         "'ssm_scan_chunk=128,moe_dispatch=gather'")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the result file (perf iterations)")
+    ap.add_argument("--strategy", default="",
+                    help="ShardingStrategy overrides, e.g. "
+                         "'prefill_seq_axis=model,fsdp=False'")
+    ap.add_argument("--profile", default="baseline",
+                    choices=["baseline", "prod"],
+                    help="'prod' = tuned per-pair flags from "
+                         "launch/profiles.py (explicit --perf/--strategy "
+                         "are appended on top)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = (list(INPUT_SHAPES) if (args.all or not args.shape)
+              else [args.shape])
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            perf, strat_spec = args.perf, args.strategy
+            if args.profile == "prod":
+                from repro.launch.profiles import resolve
+                base_perf, base_strat = resolve(arch, shape)
+                perf = ",".join(s for s in (base_perf, args.perf) if s)
+                strat_spec = ",".join(s for s in (base_strat,
+                                                  args.strategy) if s)
+            strategy = parse_strategy(strat_spec)
+            for mesh in meshes:
+                rec = run_one(arch, shape, mesh, strategy=strategy,
+                              perf=perf, tag=args.tag)
+                n_fail += rec["status"] == "error"
+    print(f"dry-run complete; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,284 @@
+"""Static analysis of compiled HLO text: collective-traffic accounting.
+
+``collective_stats(hlo_text)`` walks the computation graph (while-loop
+bodies multiplied by their trip counts, call/fusion edges by 1) and sums
+estimated per-chip bytes moved for every collective op:
+
+  all-gather          out_bytes * (g-1)/g
+  reduce-scatter      out_bytes * (g-1)
+  all-reduce          2 * bytes * (g-1)/g
+  all-to-all          bytes * (g-1)/g
+  collective-permute  bytes
+
+(g = replica-group size; ring-algorithm estimates, documented in
+EXPERIMENTS.md §Roofline.)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)[^{]*\{", re.M)
+
+
+def _shape_bytes(stext: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(stext):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return n_devices
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if (stripped.endswith("{") and ("(" in stripped)
+                and not stripped.startswith(("ROOT", "%param"))
+                and re.match(r"^(ENTRY\s+)?%?[\w\.\-]+", stripped)
+                and "=" not in stripped.split("(")[0]):
+            name = stripped.split("(")[0].replace("ENTRY", "").strip()
+            name = name.lstrip("%").strip()
+            cur = name
+            comps[cur] = []
+            if "ENTRY" in stripped:
+                comps["__entry__"] = comps[cur]
+        elif stripped == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Scan-generated while conditions compare a counter to constant(R)."""
+    best = 1
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _callees(line: str) -> List[Tuple[str, str]]:
+    out = []
+    for key in ("condition", "body", "to_apply", "true_computation",
+                "false_computation"):
+        m = re.search(key + r"=%?([\w\.\-]+)", line)
+        if m:
+            out.append((key, m.group(1)))
+    m = re.search(r"called_computations=\{([^}]*)\}", line)
+    if m:
+        for c in m.group(1).split(","):
+            out.append(("call", c.strip().lstrip("%")))
+    return out
+
+
+def computation_multipliers(text: str) -> Tuple[Dict[str, List[str]],
+                                                Dict[str, float]]:
+    comps = _split_computations(text)
+    mult: Dict[str, float] = defaultdict(float)
+    entry = "__entry__"
+    if entry not in comps:
+        return comps, {k: 1.0 for k in comps}
+    mult[entry] = 1.0
+    # Topological-ish propagation: iterate until stable (graphs are shallow).
+    for _ in range(32):
+        changed = False
+        for name, lines in comps.items():
+            m_here = mult.get(name, 0.0)
+            if m_here == 0.0:
+                continue
+            for ln in lines:
+                for kind, callee in _callees(ln):
+                    if callee not in comps or callee == name:
+                        continue
+                    factor = 1.0
+                    if kind == "body":
+                        cm = re.search(r"condition=%?([\w\.\-]+)", ln)
+                        trips = _trip_count(comps.get(cm.group(1), [])) if cm \
+                            else 1
+                        factor = float(trips)
+                    new = m_here * factor
+                    if new > mult.get(callee, 0.0):
+                        mult[callee] = new
+                        changed = True
+        if not changed:
+            break
+    return comps, dict(mult)
+
+
+_SKIP_OPS = ("parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "get-dimension-size", "iota", "copy-start", "copy-done")
+
+
+def _instr_op(line: str) -> str:
+    # '%name = dtype[shape]{layout} opname(...), attrs'
+    m = re.search(r"=\s+(?:\([^)]*\)|[\w\[\],{}\/]+)\s+([\w\-]+)\(", line)
+    return m.group(1) if m else ""
+
+
+def _out_shape_bytes(line: str) -> int:
+    rhs = line.split("=", 1)
+    if len(rhs) < 2:
+        return 0
+    head = rhs[1].strip()
+    # take text up to the op name's '(' — covers tuple outputs too
+    m = re.match(r"(\([^)]*\)|[\w\.\[\],{}]+)", head)
+    return _shape_bytes(m.group(1)) if m else 0
+
+
+def _operands(line: str) -> List[str]:
+    m = re.search(r"\w+\(([^)]*)\)", line.split("=", 1)[-1])
+    if not m:
+        return []
+    return [t.strip().lstrip("%") for t in m.group(1).split(",")
+            if t.strip().startswith("%") or re.match(r"^\w", t.strip())]
+
+
+def _shape_table(lines: List[str]) -> Dict[str, str]:
+    table = {}
+    for ln in lines:
+        m = re.match(r"(?:ROOT\s+)?%?([\w\.\-]+)\s+=\s+"
+                     r"(\([^)]*\)|[\w\[\],{}\.]+)", ln)
+        if m:
+            table[m.group(1)] = m.group(2)
+    return table
+
+
+def _dims(stext: str) -> List[int]:
+    m = _SHAPE_RE.search(stext)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _dot_flops(line: str, table: Dict[str, str]) -> float:
+    out_dims = _dims(line.split("=", 1)[1])
+    ops = _operands(line)
+    if not ops:
+        return 0.0
+    lhs_shape = table.get(ops[0], "")
+    lhs_dims = _dims(lhs_shape)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    k = 1
+    if m and lhs_dims:
+        for d in m.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                k *= lhs_dims[int(d)]
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    return 2.0 * n_out * k
+
+
+def hlo_profile(text: str, n_devices: int) -> Dict[str, float]:
+    """Trip-count-scaled FLOPs and HBM-traffic model from optimized HLO.
+
+    * flops: dot ops exactly (2*M*N*K * loop trips); every other top-level
+      op contributes #output-elements (cheap elementwise estimate).
+    * bytes: per top-level instruction, operand bytes + output bytes —
+      i.e. fusions cost one read of inputs + one write of outputs, which is
+      XLA's own fusion memory semantics. Scaled by loop trip counts.
+    """
+    comps, mult = computation_multipliers(text)
+    # Computations reached via fusion/combiner edges are *inside* another
+    # op's cost — skip them; only control-flow bodies are walked.
+    fusion_called = set()
+    for lines in comps.values():
+        for ln in lines:
+            for kind, callee in _callees(ln):
+                if kind in ("to_apply", "call"):
+                    fusion_called.add(callee)
+    flops = 0.0
+    bytes_accessed = 0.0
+    dot_flops = 0.0
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0 or name in fusion_called:
+            continue
+        if name != "__entry__" and lines is comps.get("__entry__"):
+            continue   # alias of the entry computation — already counted
+        table = _shape_table(lines)
+        for ln in lines:
+            op = _instr_op(ln)
+            if not op or op in _SKIP_OPS:
+                continue
+            out_b = _out_shape_bytes(ln)
+            if op == "dot":
+                f = _dot_flops(ln, table) * m
+                flops += f
+                dot_flops += f
+            else:
+                # elementwise-ish estimate: one flop per output element
+                flops += (out_b / 2.0) * m   # assume ~2-byte elements
+            in_b = sum(_shape_bytes(table.get(o, "")) for o in _operands(ln))
+            bytes_accessed += (out_b + in_b) * m
+    return {"flops_scaled": flops, "dot_flops_scaled": dot_flops,
+            "bytes_scaled": bytes_accessed}
+
+
+def collective_stats(text: str, n_devices: int) -> Dict[str, float]:
+    comps, mult = computation_multipliers(text)
+    per_kind = defaultdict(float)
+    count = defaultdict(int)
+    for name, lines in comps.items():
+        if name != "__entry__" and lines is comps.get("__entry__"):
+            continue   # alias of the entry computation
+        m = mult.get(name, 1.0) or 1.0
+        for ln in lines:
+            kind = next((c for c in _COLLECTIVES
+                         if re.search(rf"\b{c}(-start|-done)?\(", ln)), None)
+            if kind is None or f"{kind}-done(" in ln:
+                continue
+            lhs = ln.split(f" {kind}")[0]
+            size = _shape_bytes(lhs)
+            if size == 0:
+                continue
+            g = _group_size(ln, n_devices)
+            if g <= 1:
+                continue
+            if kind == "all-gather":
+                moved = size * (g - 1) / g
+            elif kind == "reduce-scatter":
+                moved = size * (g - 1)
+            elif kind == "all-reduce":
+                moved = 2 * size * (g - 1) / g
+            elif kind == "all-to-all":
+                moved = size * (g - 1) / g
+            else:
+                moved = size
+            per_kind[kind] += moved * m
+            count[kind] += 1
+    total = sum(per_kind.values())
+    out = {f"bytes_{k}": v for k, v in per_kind.items()}
+    out.update({f"count_{k}": float(v) for k, v in count.items()})
+    out["collective_bytes"] = total
+    return out

@@ -1,0 +1,19 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets XLA_FLAGS before calling it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (CPU smoke paths)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,61 @@
+"""Serving launcher: run the inference engine with batched requests.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch planner-proxy-100m \
+      --smoke --requests 16 --max-new 24
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.models.model import init_params
+from repro.serving.engine import InferenceEngine
+from repro.serving.sampling import SamplerConfig
+from repro.training.checkpoint import load_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="planner-proxy-100m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--cache-len", type=int, default=512)
+    ap.add_argument("--temperature", type=float, default=0.7)
+    ap.add_argument("--checkpoint", default="")
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.checkpoint:
+        params = load_checkpoint(args.checkpoint, params)
+
+    engine = InferenceEngine(cfg, params, max_batch=args.max_batch,
+                             cache_len=args.cache_len)
+    prompts = [
+        f"Plot xview1 images around Tampa Bay with cloud cover below "
+        f"{10 + i}%" for i in range(args.requests)]
+    t0 = time.time()
+    for p in prompts:
+        engine.add_request(p, max_new_tokens=args.max_new,
+                           sampler=SamplerConfig(
+                               temperature=args.temperature, top_k=40))
+    done = engine.run_until_done()
+    dt = time.time() - t0
+    st = engine.throughput_stats()
+    print(f"served {len(done)} requests in {dt:.2f}s | "
+          f"decode steps {st['decode_steps']} | "
+          f"{st['tokens_generated'] / max(dt, 1e-9):.1f} tok/s")
+    lat = [r.finish_t - r.enqueue_t for r in done]
+    ttft = [r.first_token_t - r.enqueue_t for r in done]
+    print(f"p50 latency {sorted(lat)[len(lat)//2]*1000:.0f}ms | "
+          f"p50 TTFT {sorted(ttft)[len(ttft)//2]*1000:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Distributed training launcher.
+
+On real hardware this binds the train step to the production mesh via the
+same sharding rules the dry-run validates; on this CPU container use
+``--local`` (1-device mesh) for end-to-end runs of the reduced configs.
+
+  PYTHONPATH=src python -m repro.launch.train --arch planner-proxy-100m \
+      --steps 200 --batch 8 --seq 256 --local
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import INPUT_SHAPES
+from repro.configs import get_config, get_smoke_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models.model import init_params
+from repro.training.checkpoint import save_checkpoint
+from repro.training.data import PackedLMDataset, synthetic_docs
+from repro.training.loop import make_train_step
+from repro.training.optimizer import adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="planner-proxy-100m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--local", action="store_true",
+                    help="1-device mesh (CPU container)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    mesh = (make_local_mesh() if args.local
+            else make_production_mesh(multi_pod=args.multi_pod))
+    strategy = shd.ShardingStrategy()
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = adamw_init(params)
+    params_sh = shd.params_sharding(params, cfg, mesh, strategy)
+    opt_sh = shd.opt_state_sharding(opt_state, params, cfg, mesh, strategy)
+
+    step_fn = make_train_step(cfg, lr=args.lr, remat=args.remat)
+    with mesh:
+        jit_step = jax.jit(step_fn, in_shardings=(params_sh, opt_sh, None),
+                           out_shardings=(params_sh, opt_sh, None),
+                           donate_argnums=(0, 1))
+        data = PackedLMDataset(synthetic_docs(cfg.vocab_size), args.batch,
+                               args.seq, cfg.vocab_size)
+        t0 = time.time()
+        for step in range(args.steps):
+            batch = next(data)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                tput = (args.batch * args.seq * (step + 1)
+                        / max(time.time() - t0, 1e-9))
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"tok/s {tput:,.0f}")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params)
+        print(f"checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

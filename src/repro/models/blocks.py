@@ -1,0 +1,227 @@
+"""Per-layer-kind block init / apply / cache-spec.
+
+A *block* is one transformer layer of a given kind (see config.py for the
+kind vocabulary). ``block_apply`` is pure and mode-polymorphic:
+
+  mode="train"   full-sequence forward, no cache
+  mode="prefill" full-sequence forward, returns a filled KV/state cache
+  mode="decode"  single-token forward against a pre-allocated cache
+
+Caches are dicts of arrays sized by ``cache_len`` (full-attention kinds) or
+``cfg.window`` (sliding-window kinds — ring buffers indexed by pos % W).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, WINDOW_KINDS
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+
+
+# ------------------------------------------------------------------- init ----
+
+def block_init(rng, kind: str, cfg: ModelConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(rng, 8)
+    d = cfg.d_model
+    if kind == "mlstm":
+        return {"norm1": L.rmsnorm_init(d, dtype),
+                "mlstm": X.mlstm_init(ks[0], cfg, dtype)}
+    if kind == "slstm":
+        return {"norm1": L.rmsnorm_init(d, dtype),
+                "slstm": X.slstm_init(ks[0], cfg, dtype)}
+    p = {"norm1": L.rmsnorm_init(d, dtype),
+         "attn": L.attn_init(ks[0], cfg, dtype=dtype),
+         "norm2": L.rmsnorm_init(d, dtype)}
+    if kind in ("full", "local", "enc"):
+        p["mlp"] = L.mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_act, dtype)
+    elif kind == "dense":
+        dff = cfg.d_ff if cfg.moe is None else cfg.moe.top_k * cfg.moe.d_expert
+        p["mlp"] = L.mlp_init(ks[1], d, dff, cfg.mlp_act, dtype)
+    elif kind == "moe":
+        p["moe"] = M.moe_init(ks[1], cfg, dtype)
+    elif kind in ("hymba_g", "hymba_w"):
+        p["ssm"] = S.ssm_init(ks[2], cfg, dtype)
+        p["norm_a"] = L.rmsnorm_init(d, dtype)
+        p["norm_s"] = L.rmsnorm_init(d, dtype)
+        p["mlp"] = L.mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_act, dtype)
+    elif kind == "encdec":
+        p["norm_x"] = L.rmsnorm_init(d, dtype)
+        p["xattn"] = L.attn_init(ks[3], cfg, dtype=dtype)
+        p["mlp"] = L.mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_act, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+# ------------------------------------------------------------ cache specs ----
+
+def block_cache_init(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
+                     enc_len: int = 0):
+    """Zero-initialized cache for one block."""
+    hd, Hkv = cfg.d_head, cfg.n_kv_heads
+    if kind == "mlstm":
+        return {"mlstm": X.mlstm_state_init(cfg, batch)}
+    if kind == "slstm":
+        return {"slstm": X.slstm_state_init(cfg, batch)}
+    Sc = min(cfg.window, cache_len) if kind in WINDOW_KINDS else cache_len
+    c = {"k": jnp.zeros((batch, Hkv, Sc, hd), jnp.bfloat16),
+         "v": jnp.zeros((batch, Hkv, Sc, hd), jnp.bfloat16)}
+    if kind in ("hymba_g", "hymba_w"):
+        c["ssm"] = S.ssm_init_state(cfg, batch)
+    if kind == "encdec":
+        c["ck"] = jnp.zeros((batch, Hkv, enc_len, hd), jnp.bfloat16)
+        c["cv"] = jnp.zeros((batch, Hkv, enc_len, hd), jnp.bfloat16)
+    return c
+
+
+def _ring_from_prefill(k, W: int, Sc: int):
+    """Pack the last W entries of k (B,H,S,hd) into ring order, padded to Sc."""
+    B, H, S, hd = k.shape
+    if S <= Sc:
+        return jnp.pad(k, ((0, 0), (0, 0), (0, Sc - S), (0, 0)))
+    last = k[:, :, -Sc:]
+    return jnp.roll(last, S % Sc, axis=2)
+
+
+# ------------------------------------------------------------------ apply ----
+
+def _attn_sublayer(p, x, cfg, kind, mode, cache, pos, positions, cross=False,
+                   memory=None):
+    """Shared attention sub-layer. Returns (y, new_cache_kv)."""
+    window = cfg.window if (kind in WINDOW_KINDS and not cross) else 0
+    causal = (kind != "enc") and not cross
+    ap = p["xattn"] if cross else p["attn"]
+
+    if cross:
+        if mode == "decode":
+            k, v = cache["ck"], cache["cv"]
+            new_kv = {}
+        else:
+            _, k, v = L.qkv_proj(ap, memory, cfg)
+            new_kv = {"ck": k.astype(jnp.bfloat16), "cv": v.astype(jnp.bfloat16)}
+        B, Sq = x.shape[0], x.shape[1]
+        q = (x @ ap["wq"])
+        if cfg.qkv_bias:
+            q = q + ap["bq"]
+        q = q.reshape(B, Sq, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        out = L.attention(q, k, v, causal=False, cap=cfg.attn_softcap,
+                          scale=cfg.attn_scale)
+        return L.out_proj(ap, out), new_kv
+
+    q, k, v = L.qkv_proj(ap, x, cfg)
+    if cfg.rope_kind == "rope" and kind != "enc":
+        q = L.apply_rope(q, positions[:, None], cfg.rope_theta)
+        k = L.apply_rope(k, positions[:, None], cfg.rope_theta)
+    elif cfg.rope_kind == "mrope":
+        # positions: (3, B, S) -> broadcast over heads
+        p3 = positions[:, :, None]                      # (3,B,1,S)
+        q = L.apply_mrope(q, p3, cfg.rope_theta, cfg.mrope_sections)
+        k = L.apply_mrope(k, p3, cfg.rope_theta, cfg.mrope_sections)
+
+    if mode == "train":
+        out = L.attention(q, k, v, causal=causal, window=window,
+                          cap=cfg.attn_softcap, scale=cfg.attn_scale)
+        return L.out_proj(ap, out), {}
+
+    if mode == "prefill":
+        out = L.attention(q, k, v, causal=causal, window=window,
+                          cap=cfg.attn_softcap, scale=cfg.attn_scale)
+        Sc = cache["k"].shape[2]
+        if window:
+            nk = _ring_from_prefill(k.astype(jnp.bfloat16), window, Sc)
+            nv = _ring_from_prefill(v.astype(jnp.bfloat16), window, Sc)
+        else:
+            S = k.shape[2]
+            padlen = Sc - S
+            padk = lambda t: (jnp.pad(t, ((0, 0), (0, 0), (0, padlen), (0, 0)))
+                              if padlen > 0 else t[:, :, :Sc])
+            nk, nv = padk(k.astype(jnp.bfloat16)), padk(v.astype(jnp.bfloat16))
+        return L.out_proj(ap, out), {"k": nk, "v": nv}
+
+    # decode: x is (B,1,d); write k/v at slot, attend over valid entries.
+    # pos may be a scalar (synchronized batch — dynamic_update_slice) or a
+    # (B,) vector (continuous batching — one-hot masked write).
+    Sc = cache["k"].shape[2]
+    if jnp.ndim(pos) == 0:
+        slot = (pos % Sc) if window else jnp.minimum(pos, Sc - 1)
+        nk = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(jnp.bfloat16), (0, 0, slot, 0))
+        nv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(jnp.bfloat16), (0, 0, slot, 0))
+    else:
+        slot = (pos % Sc) if window else jnp.minimum(pos, Sc - 1)
+        oh = jax.nn.one_hot(slot, Sc, dtype=jnp.float32)[:, None, :, None]
+        nk = (cache["k"] * (1 - oh) + k.astype(jnp.float32) * oh
+              ).astype(jnp.bfloat16)
+        nv = (cache["v"] * (1 - oh) + v.astype(jnp.float32) * oh
+              ).astype(jnp.bfloat16)
+    kv_len = jnp.minimum(pos + 1, Sc)
+    out = L.attention(q, nk, nv, causal=False, kv_len=kv_len,
+                      cap=cfg.attn_softcap, scale=cfg.attn_scale)
+    return L.out_proj(ap, out), {"k": nk, "v": nv}
+
+
+def block_apply(kind: str, p, x, cfg: ModelConfig, *, mode: str,
+                cache=None, pos=None, positions=None, memory=None):
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+
+    if kind == "mlstm":
+        state = (cache or {"mlstm": X.mlstm_state_init(cfg, x.shape[0])})["mlstm"]
+        y, ns = X.mlstm_block(p["mlstm"], L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                              cfg, state)
+        return x + y, {"mlstm": ns}, aux
+
+    if kind == "slstm":
+        state = (cache or {"slstm": X.slstm_state_init(cfg, x.shape[0])})["slstm"]
+        y, ns = X.slstm_block(p["slstm"], L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                              cfg, state)
+        return x + y, {"slstm": ns}, aux
+
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+
+    if kind in ("hymba_g", "hymba_w"):
+        attn_y, kv = _attn_sublayer(p, h, cfg, kind, mode, cache, pos, positions)
+        ssm_state = cache.get("ssm") if (cache and mode != "train") else None
+        if mode == "train":
+            ssm_y, ns = S.ssm_forward(p["ssm"], h, cfg, None)
+        else:
+            if mode == "prefill":
+                ssm_state = None
+            ssm_y, ns = S.ssm_forward(p["ssm"], h, cfg, ssm_state)
+        y = 0.5 * (L.rmsnorm(p["norm_a"], attn_y, cfg.norm_eps)
+                   + L.rmsnorm(p["norm_s"], ssm_y, cfg.norm_eps))
+        x = x + y
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h2, cfg.mlp_act)
+        new_cache = dict(kv)
+        if mode != "train":
+            new_cache["ssm"] = ns
+        return x, new_cache, aux
+
+    attn_y, kv = _attn_sublayer(p, h, cfg, kind, mode, cache, pos, positions)
+    x = x + attn_y
+    new_cache = dict(kv)
+
+    if kind == "encdec":
+        hx = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        xa_y, xkv = _attn_sublayer(p, hx, cfg, kind, mode, cache, pos,
+                                   positions, cross=True, memory=memory)
+        x = x + xa_y
+        new_cache.update(xkv)
+        if mode == "decode":
+            new_cache["ck"], new_cache["cv"] = cache["ck"], cache["cv"]
+
+    h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if kind == "moe":
+        y, aux = M.moe_ffn(p["moe"], h2, cfg)
+    else:
+        y = L.mlp(p["mlp"], h2, cfg.mlp_act)
+    return x + y, new_cache, aux

@@ -1,0 +1,99 @@
+"""Input construction for every (architecture × input shape) pair.
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (no allocation) for
+the dry-run; ``make_batch`` returns concrete arrays for smoke tests and
+examples. Both produce the same pytree structure:
+
+  train:   {"tokens", "labels"} (+frames | +patch_embeds/mrope_pos)
+  prefill: {"tokens"} (+frames | +patch_embeds/mrope_pos)
+  decode:  ({"tokens"(B,1)} (+mrope_pos), cache)
+
+Modality stubs (the one allowed carve-out): whisper "frames" and qwen2-vl
+"patch_embeds" are precomputed embeddings of the correct shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig, ShapeConfig
+from repro.models.model import WHISPER_DEC_CACHE, init_cache
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _whisper_dec_len(seq_len: int) -> int:
+    # Decoder prompt rides along with the long encoder axis.
+    return max(16, min(WHISPER_DEC_CACHE, seq_len // 128))
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct batch for (cfg, shape). Decode: token batch only."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "decode":
+        b: Dict[str, Any] = {"tokens": SDS((B, 1), jnp.int32)}
+        if cfg.rope_kind == "mrope":
+            b["mrope_pos"] = SDS((3, B, 1), jnp.int32)
+        return b
+    if cfg.family == "audio":
+        Sd = _whisper_dec_len(S)
+        b = {"tokens": SDS((B, Sd), jnp.int32),
+             "frames": SDS((B, S, cfg.d_model), jnp.bfloat16)}
+        if shape.mode == "train":
+            b["labels"] = SDS((B, Sd), jnp.int32)
+        return b
+    b = {"tokens": SDS((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        b["patch_embeds"] = SDS((B, cfg.n_vision_tokens, cfg.d_model),
+                                jnp.bfloat16)
+        b["mrope_pos"] = SDS((3, B, S), jnp.int32)
+    if shape.mode == "train":
+        b["labels"] = SDS((B, S), jnp.int32)
+    return b
+
+
+def cache_struct(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    """ShapeDtypeStruct cache for decode shapes."""
+    assert shape.mode == "decode"
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        tree = jax.eval_shape(
+            lambda: init_cache(cfg, B, WHISPER_DEC_CACHE, enc_len=S))
+    else:
+        tree = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return tree
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+    """Concrete batch (numpy-backed) matching batch_struct."""
+    rng = np.random.default_rng(seed)
+    spec = batch_struct(cfg, shape)
+    out = {}
+    for k, v in spec.items():
+        if v.dtype == jnp.int32:
+            if k == "mrope_pos":
+                # text positions: t=h=w=position index (vision handled by env)
+                pos = np.broadcast_to(np.arange(v.shape[-1], dtype=np.int32),
+                                      v.shape)
+                out[k] = jnp.asarray(pos)
+            else:
+                out[k] = jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, v.shape, dtype=np.int32))
+        else:
+            out[k] = jnp.asarray(
+                rng.standard_normal(v.shape, dtype=np.float32), v.dtype)
+    return out
+
+
+def make_decode_state(cfg: ModelConfig, shape: ShapeConfig, prefill_len: int):
+    """Concrete zero cache positioned at prefill_len (smoke decode tests)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        cache = init_cache(cfg, B, WHISPER_DEC_CACHE, enc_len=S)
+    else:
+        cache = init_cache(cfg, B, S)
+    cache["pos"] = jnp.asarray(prefill_len, jnp.int32)
+    return cache

@@ -1,0 +1,282 @@
+"""Core model primitives: norms, rotary embeddings, attention, MLPs.
+
+All functions are pure JAX over explicit parameter pytrees (dicts of
+jnp arrays) so they compose with pjit/shard_map without a framework.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+
+# ------------------------------------------------------------------ init ----
+
+def dense_init(rng, shape, scale: float = 1.0, dtype=jnp.bfloat16):
+    fan_in = shape[0]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(rng, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms ----
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope ----
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, d_head); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_3d, theta: float, sections):
+    """Multimodal RoPE (Qwen2-VL).
+
+    x: (..., S, d_head); positions_3d: (3, ..., S) with (t, h, w) ids;
+    sections: per-axis counts of rotary frequency pairs, sum == d_head//2.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(d, theta)                       # (half,)
+    # Build per-frequency position: frequencies are assigned to t/h/w blocks.
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)
+    pos = positions_3d.astype(jnp.float32)             # (3, ..., S)
+    pos_sel = jnp.take(pos, sec_id, axis=0)            # (half, ..., S) via axis-0 gather
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)             # (..., S, half)
+    ang = pos_sel * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(S: int, d: int):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)  # (S, d)
+
+
+# ------------------------------------------------------------- attention ----
+
+def softcap(logits, cap: float):
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def _attn_chunk(q_blk, k, v, mask_blk, scale, cap):
+    """One query block of attention. q_blk: (B,Hkv,G,Cq,hd); k/v: (B,Hkv,S,hd);
+    mask_blk: broadcastable to (B,1,1,Cq,S) boolean (True = keep).
+
+    Perf knob attn_probs_dtype=bfloat16 keeps the row-max/sum reductions
+    in fp32 but stores the (Cq,S) logits/probs tiles in bf16 — halves the
+    dominant HBM-traffic term of the jnp prefill path."""
+    from repro.common.perf import get_flags
+    pdt = jnp.dtype(get_flags().attn_probs_dtype)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = softcap(logits, cap)
+    logits = jnp.where(mask_blk[:, :, None, :, :], logits, -1e30)
+    if pdt == jnp.bfloat16:
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        p = jnp.exp((logits - m)).astype(pdt)
+        denom = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                         v.astype(pdt)).astype(jnp.float32) / denom
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", probs,
+                         v.astype(jnp.float32))
+    return out.astype(q_blk.dtype)
+
+
+def attention(q, k, v, *, causal: bool, window: int = 0, cap: float = 0.0,
+              scale: float = 0.0, q_offset=0, kv_len=None,
+              chunk: int = 0):
+    """Memory-bounded multi-query attention (pure jnp, GSPMD-friendly).
+
+    q: (B, Hq, Sq, hd); k, v: (B, Hkv, Sk, hd). GQA via reshape.
+    window > 0 applies a sliding-window causal band (i-j < window).
+    q_offset: absolute position of q[0] (for decode / chunked prefill).
+    kv_len: number of valid kv entries (scalar, for cache decode); None = Sk.
+    Chunked over the query axis with a lax.scan to bound the logits temp.
+    """
+    from repro.common.perf import get_flags
+    flags = get_flags()
+    chunk = chunk or flags.attn_chunk
+    kv_local = True   # no mesh -> KV trivially chip-local
+    if flags.attn_constraint == "auto" and q.shape[2] > 1:
+        # Prefill/train only: decode (Sq=1) attends over the live KV cache,
+        # whose seq-sharded layout (decode_cache_seq) must not be overridden.
+        from repro.distributed.annotate import constrain_attn
+        q, k, v, kv_local = constrain_attn(q, k, v)
+    else:
+        from repro.distributed.annotate import _mesh
+        kv_local = _mesh() is None
+    B, Hq, Sq, hd = q.shape
+    Hkv = k.shape[1]
+    Sk = k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Hkv, G, Sq, hd)
+
+    kv_pos = jnp.arange(Sk)
+    if kv_len is None:
+        valid = jnp.ones((1, Sk), bool)                           # (1|B, Sk)
+    else:
+        kvl = jnp.asarray(kv_len)
+        kvl = kvl[None] if kvl.ndim == 0 else kvl                 # (1,)|(B,)
+        valid = kv_pos[None, :] < kvl[:, None]
+
+    def mask_for(q_pos):
+        # q_pos: (Cq,) absolute positions -> (1|B, Cq, Sk)
+        m = valid[:, None, :]
+        if causal:
+            m = m & (kv_pos[None, None, :] <= q_pos[None, :, None])
+        if window and window > 0:
+            m = m & (q_pos[None, :, None] - kv_pos[None, None, :] < window)
+        return m
+
+    if Sq <= chunk:
+        q_pos = q_offset + jnp.arange(Sq)
+        m = mask_for(q_pos)[:, None]                              # (1|B,1,Sq,Sk)
+        out = _attn_chunk(qg, k, v, jnp.broadcast_to(m, (B, Hkv, Sq, Sk)),
+                          scale, cap)
+        return out.reshape(B, Hq, Sq, hd)
+
+    assert Sq % chunk == 0, (Sq, chunk)
+    n_blk = Sq // chunk
+    qb = qg.reshape(B, Hkv, G, n_blk, chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+
+    chunk_fn = lambda qi, kk, vv, m: _attn_chunk(qi, kk, vv, m, scale, cap)
+    if flags.attn_chunk_remat == "on":
+        # Don't save the stacked per-chunk (B,H,Cq,Sk) probs for backward —
+        # recompute them; bounds the train-time temp to one chunk's logits.
+        chunk_fn = jax.checkpoint(chunk_fn)
+
+    # Sliding-window band slicing: a q-chunk starting at absolute position
+    # p attends to kv positions in [p+chunk-1-window+1, p+chunk-1], so a
+    # static-width (window+chunk) K/V band covers it; masking handles the
+    # ragged edges. Only sound when q positions are contiguous from
+    # q_offset (prefill/train), which is the only way this path is called.
+    W_eff = min(Sk, window + chunk) if window and window > 0 else 0
+    slice_kv = (flags.attn_window_slice == "on" and W_eff
+                and W_eff < Sk and causal and kv_len is None
+                and isinstance(q_offset, int) and kv_local)
+    # kv_local guard: dynamic-slicing a *seq-sharded* KV makes GSPMD
+    # rematerialize (EXPERIMENTS.md §Perf gemma2 iteration 3).
+
+    def body(_, inp):
+        i, qi = inp
+        q_pos = q_offset + i * chunk + jnp.arange(chunk)
+        if slice_kv:
+            start = jnp.clip(q_offset + (i + 1) * chunk - W_eff, 0,
+                             Sk - W_eff)
+            kk = jax.lax.dynamic_slice_in_dim(k, start, W_eff, axis=2)
+            vv = jax.lax.dynamic_slice_in_dim(v, start, W_eff, axis=2)
+            kv_p = start + jnp.arange(W_eff)
+            m = (kv_p[None, None, :] <= q_pos[None, :, None]) \
+                & (q_pos[None, :, None] - kv_p[None, None, :] < window)
+            m = jnp.broadcast_to(m[:, None], (B, Hkv, chunk, W_eff))
+            return None, chunk_fn(qi, kk, vv, m)
+        m = jnp.broadcast_to(mask_for(q_pos)[:, None], (B, Hkv, chunk, Sk))
+        return None, chunk_fn(qi, k, v, m)
+
+    _, ob = jax.lax.scan(body, None, (jnp.arange(n_blk), qb))
+    out = ob.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, Sq, hd)
+    if flags.attn_constraint == "auto":
+        from repro.distributed.annotate import constrain_attn_out
+        out = constrain_attn_out(out, Hkv)
+    return out
+
+
+# --------------------------------------------------------- attn projections --
+
+def attn_init(rng, cfg: ModelConfig, cross: bool = False, dtype=jnp.bfloat16):
+    ks = jax.random.split(rng, 8)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": dense_init(ks[0], (d, qd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, kvd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, kvd), dtype=dtype),
+        "wo": dense_init(ks[3], (qd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    return p
+
+
+def qkv_proj(p, x, cfg: ModelConfig):
+    """x: (B,S,d) -> q (B,Hq,S,hd), k,v (B,Hkv,S,hd) (pre-RoPE)."""
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def out_proj(p, attn_out):
+    """attn_out: (B,H,S,hd) -> (B,S,d)."""
+    B, H, S, hd = attn_out.shape
+    y = attn_out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return y @ p["wo"]
+
+
+# -------------------------------------------------------------------- mlp ----
+
+def mlp_init(rng, d: int, d_ff: int, act: str, dtype=jnp.bfloat16):
+    ks = jax.random.split(rng, 3)
+    if act.endswith("_glu"):
+        return {"w_gate": dense_init(ks[0], (d, d_ff), dtype=dtype),
+                "w_up": dense_init(ks[1], (d, d_ff), dtype=dtype),
+                "w_down": dense_init(ks[2], (d_ff, d), dtype=dtype)}
+    return {"w_up": dense_init(ks[0], (d, d_ff), dtype=dtype),
+            "w_down": dense_init(ks[1], (d_ff, d), dtype=dtype)}
+
+
+def mlp(p, x, act: str):
+    if act == "silu_glu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif act == "gelu_glu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    else:
+        raise ValueError(act)
+    return h @ p["w_down"]

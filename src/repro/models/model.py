@@ -1,0 +1,279 @@
+"""Unified model: init / train forward / prefill / decode over segment stacks.
+
+The layer stack is organized as *segments* ``((unit_kinds, n_repeat), ...)``;
+within a segment the unit (one or more heterogeneous layers) is repeated
+``n_repeat`` times and executed with ``jax.lax.scan`` over stacked
+parameters, so HLO size is independent of depth. Heterogeneous stacks
+(Gemma-2 local/global alternation, Hymba's sparse global layers, xLSTM's
+mLSTM/sLSTM mix, Kimi's dense first layer) are expressed as either longer
+units or extra segments.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.blocks import block_apply, block_cache_init, block_init
+
+Params = Any
+Cache = Any
+
+# Whisper decoders are architecturally capped; decode shapes use the
+# encoder axis for the long dimension.
+WHISPER_DEC_CACHE = 448
+
+
+# ------------------------------------------------------------------- init ----
+
+def init_params(rng, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    rngs = jax.random.split(rng, 4 + len(cfg.segments))
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(rngs[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            rngs[1], (cfg.d_model, cfg.vocab_size), dtype=dtype)
+
+    def stacked_segment(rng_seg, unit, R):
+        keys = jax.random.split(rng_seg, R)
+        seg = []
+        for ui, kind in enumerate(unit):
+            sub = jax.vmap(
+                lambda k: block_init(jax.random.fold_in(k, ui), kind, cfg,
+                                     dtype))(keys)
+            seg.append(sub)
+        return seg
+
+    params["segments"] = [
+        stacked_segment(rngs[4 + si], unit, R)
+        for si, (unit, R) in enumerate(cfg.segments)]
+
+    if cfg.n_enc_layers:
+        enc_keys = jax.random.split(rngs[2], cfg.n_enc_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: block_init(k, "enc", cfg, dtype))(
+                enc_keys),
+            "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        }
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               enc_len: int = 0) -> Cache:
+    def stacked_cache(unit, R):
+        seg = []
+        for kind in unit:
+            one = block_cache_init(kind, cfg, batch, cache_len, enc_len)
+            seg.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (R,) + x.shape), one))
+        return seg
+    return {"segments": [stacked_cache(unit, R) for unit, R in cfg.segments],
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+# ------------------------------------------------------------------ stack ----
+
+def _apply_stack(params, cfg: ModelConfig, x, *, mode, cache=None, pos=None,
+                 positions=None, memory=None, remat=False, seq_axis=None):
+    """Run all segments. Returns (x, new_segment_caches, aux)."""
+    from repro.distributed.annotate import constrain_seq
+    new_segs = []
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, (unit, R) in enumerate(cfg.segments):
+        seg_params = params["segments"][si]
+        seg_cache = cache["segments"][si] if cache is not None else None
+
+        def body(h, xs, unit=unit):
+            p_r = xs[0]
+            c_r = xs[1] if seg_cache is not None else [None] * len(unit)
+            ncs, aux = [], jnp.zeros((), jnp.float32)
+            if seq_axis:   # sequence-parallel: pin the residual stream
+                h = constrain_seq(h, seq_axis)
+            for ui, kind in enumerate(unit):
+                h, nc, a = block_apply(kind, p_r[ui], h, cfg, mode=mode,
+                                       cache=c_r[ui], pos=pos,
+                                       positions=positions, memory=memory)
+                ncs.append(nc)
+                aux = aux + a
+            if seq_axis:
+                h = constrain_seq(h, seq_axis)
+            return h, (ncs, aux)
+
+        if remat:
+            body = jax.checkpoint(body)
+
+        xs = (seg_params, seg_cache) if seg_cache is not None else (seg_params,)
+        x, (ncs, auxs) = jax.lax.scan(lambda h, t: body(h, t), x, xs)
+        new_segs.append(ncs)
+        aux_total = aux_total + jnp.sum(auxs)
+    return x, new_segs, aux_total
+
+
+def _encode(params, cfg: ModelConfig, frames):
+    """Whisper encoder over precomputed frame embeddings (B, S_enc, d)."""
+    x = frames + L.sinusoidal_positions(frames.shape[1],
+                                        cfg.d_model).astype(frames.dtype)
+    enc = params["encoder"]
+
+    def body(h, p_r):
+        h, _, _ = block_apply("enc", p_r, h, cfg, mode="train")
+        return h, ()
+
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return L.rmsnorm(enc["final_norm"], x, cfg.norm_eps)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch, pos=None):
+    """Token (+modality) embedding. Returns (x, positions)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.emb_scale_by_sqrt_d:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        nv = batch["patch_embeds"].shape[1]
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype),
+                             x[:, nv:]], axis=1)
+    if cfg.rope_kind == "mrope":
+        positions = batch["mrope_pos"]                     # (3, B, S)
+    else:
+        if pos is None:
+            offset = 0
+        elif jnp.ndim(pos) == 0:
+            offset = pos
+        else:
+            offset = pos[:, None]                          # (B,1) per-seq
+        positions = offset + jnp.arange(S)[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+    if cfg.rope_kind == "none":
+        x = x + _sin_at(cfg, positions).astype(x.dtype)
+    return x, positions
+
+
+def _sin_at(cfg, positions):
+    """Sinusoidal embedding evaluated at arbitrary positions (B,S)."""
+    d = cfg.d_model
+    pos = positions.astype(jnp.float32)[..., None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = pos / (10_000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _logits(params, cfg: ModelConfig, x):
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x.astype(jnp.float32) @ head.astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def xent_chunked(params, cfg: ModelConfig, x, labels, chunk: int = 256):
+    """Cross-entropy without materializing (B,S,V) logits: scan over S."""
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    xs = x.reshape(B, nc, chunk, d).swapaxes(0, 1)
+    ls = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def body(acc, inp):
+        xc, lc = inp
+        logits = _logits(params, cfg, xc)                  # (B,C,V) fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        loss = jnp.sum((lse - picked) * mask)
+        return (acc[0] + loss, acc[1] + jnp.sum(mask)), ()
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ------------------------------------------------------------- public API ----
+
+def train_loss(params, cfg: ModelConfig, batch, remat: bool = True):
+    """Full training forward -> scalar LM loss (+ MoE aux)."""
+    if cfg.n_enc_layers:
+        memory = _encode(params, cfg, batch["frames"])
+    else:
+        memory = None
+    x, positions = _embed_inputs(params, cfg, batch)
+    x, _, aux = _apply_stack(params, cfg, x, mode="train",
+                             positions=positions, memory=memory, remat=remat)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    loss = xent_chunked(params, cfg, x, batch["labels"])
+    return loss + aux
+
+
+def prefill(params, cfg: ModelConfig, batch, cache_len: int, seq_axis=None):
+    """Process a prompt; returns (last-token logits (B,V), filled cache).
+
+    seq_axis: mesh axis name for sequence-parallel prefill (context
+    parallelism) — the residual stream's seq dim is pinned to it.
+    """
+    if cfg.n_enc_layers:
+        memory = _encode(params, cfg, batch["frames"])
+        enc_len = memory.shape[1]
+    else:
+        memory, enc_len = None, 0
+    x, positions = _embed_inputs(params, cfg, batch)
+    S = batch["tokens"].shape[1]
+    cache = init_cache(cfg, batch["tokens"].shape[0],
+                       min(cache_len, WHISPER_DEC_CACHE)
+                       if cfg.n_enc_layers else cache_len, enc_len)
+    x, new_segs, _ = _apply_stack(params, cfg, x, mode="prefill",
+                                  cache=cache, pos=jnp.zeros((), jnp.int32),
+                                  positions=positions, memory=memory,
+                                  seq_axis=seq_axis)
+    x_last = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = _logits(params, cfg, x_last)[:, 0]
+    return logits, {"segments": new_segs,
+                    "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    """One decode step. batch["tokens"]: (B,1). Returns (logits, cache)."""
+    pos = cache["pos"]
+    x, positions = _embed_inputs(params, cfg, batch, pos=pos)
+    x, new_segs, _ = _apply_stack(params, cfg, x, mode="decode",
+                                  cache=cache, pos=pos, positions=positions)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, {"segments": new_segs, "pos": pos + 1}
+
+
+# ------------------------------------------------------------ accounting ----
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def count_params_analytic(cfg: ModelConfig) -> int:
+    shapes = param_shapes(cfg)
+    return sum(int(jnp.prod(jnp.array(l.shape)))
+               for l in jax.tree.leaves(shapes))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active parameters per token (MoE experts counted top_k/E)."""
+    shapes = param_shapes(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for s in leaf.shape:
+            n *= int(s)
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path
+                if hasattr(k, "key") or hasattr(k, "name")]
+        if cfg.moe and "moe" in keys and any(
+                k in ("w_gate", "w_up", "w_down") for k in keys):
+            n = n * cfg.moe.top_k // cfg.moe.n_experts
+        total += n
+    return total

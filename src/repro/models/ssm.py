@@ -1,0 +1,164 @@
+"""Mamba-style selective state-space layer (used by the Hymba hybrid blocks).
+
+TPU adaptation: the CUDA selective-scan kernel becomes a *chunked
+associative scan* — ``jax.lax.scan`` over sequence chunks carrying the SSM
+state, with ``jax.lax.associative_scan`` inside each chunk. This bounds the
+(B, chunk, d_inner, d_state) temporary to VMEM-friendly sizes while keeping
+O(S) work, and it lowers to plain HLO that GSPMD can partition (d_inner on
+the ``model`` axis).
+
+Decode uses the exact single-step recurrence with a carried (h, conv) state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.layers import dense_init
+
+SCAN_CHUNK = 512
+
+
+def ssm_init(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
+    scfg = cfg.ssm
+    d = cfg.d_model
+    d_inner = scfg.expand * d
+    dt_rank = scfg.dt_rank or max(1, math.ceil(d / 16))
+    ks = jax.random.split(rng, 8)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (scfg.d_conv, d_inner), jnp.float32)
+                   / math.sqrt(scfg.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_bc": dense_init(ks[2], (d_inner, 2 * scfg.d_state), dtype=dtype),
+        "w_dt": dense_init(ks[3], (d_inner, dt_rank), dtype=dtype),
+        "dt_proj": dense_init(ks[4], (dt_rank, d_inner), dtype=dtype),
+        "dt_bias": jnp.zeros((d_inner,), jnp.float32) - 4.6,   # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, scfg.d_state + 1, dtype=jnp.float32),
+            (d_inner, scfg.d_state))),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], (d_inner, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B,S,di); depthwise causal conv with kernel (K,di)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssm_params(p, x, scfg):
+    """x: (B,S,di) post-conv activations -> dt (B,S,di), B_, C_ (B,S,n)."""
+    bc = x @ p["w_bc"]
+    B_, C_ = jnp.split(bc.astype(jnp.float32), 2, axis=-1)
+    dt = jax.nn.softplus((x @ p["w_dt"]) @ p["dt_proj"]
+                         + p["dt_bias"].astype(x.dtype))
+    return dt.astype(jnp.float32), B_, C_
+
+
+def _scan_chunk(h0, a, bx):
+    """Associative scan of h_t = a_t * h_{t-1} + bx_t within a chunk.
+
+    a, bx: (B, C, di, n); h0: (B, di, n). Returns (h_all (B,C,di,n), h_last).
+    """
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h_all = a_cum * h0[:, None] + b_cum
+    return h_all, h_all[:, -1]
+
+
+def selective_scan(p, x, h0, chunk: int = 0):
+    """Selective SSM over a full sequence.
+
+    x: (B,S,di) conv+silu activations; h0: (B,di,n) initial state.
+    Returns (y (B,S,di) float32, h_last (B,di,n)).
+
+    Perf knobs (common.perf): chunk length bounds the (B,chunk,di,n)
+    associative-scan temporaries; ssm_scan_dtype runs the intra-chunk
+    elements in bf16 while the carried state stays fp32.
+    """
+    from repro.common.perf import get_flags
+    flags = get_flags()
+    chunk = chunk or flags.ssm_scan_chunk
+    scan_dtype = jnp.dtype(flags.ssm_scan_dtype)
+
+    B, S, di = x.shape
+    A = -jnp.exp(p["A_log"])                       # (di, n)
+    n = A.shape[-1]
+    dt, B_, C_ = _ssm_params(p, x, None)
+    xf = x.astype(jnp.float32)
+
+    def chunk_body(h, inp):
+        dt_c, B_c, C_c, x_c = inp                  # (B,C,...) chunk slices
+        a = jnp.exp(dt_c[..., None] * A).astype(scan_dtype)  # (B,C,di,n)
+        bx = ((dt_c * x_c)[..., None]
+              * B_c[:, :, None, :]).astype(scan_dtype)
+        h_all, h_last = _scan_chunk(h.astype(scan_dtype), a, bx)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all,
+                       C_c.astype(scan_dtype)).astype(jnp.float32)
+        return h_last.astype(jnp.float32), y
+
+    if S <= chunk:
+        h_last, y = chunk_body(h0, (dt, B_, C_, xf))
+    else:
+        pad = (-S) % chunk
+        if pad:
+            z = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+            dt, B_, C_, xf = z(dt), z(B_), z(C_), z(xf)
+        nc = (S + pad) // chunk
+        resh = lambda t: t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+        h_last, ys = jax.lax.scan(chunk_body, h0, (resh(dt), resh(B_),
+                                                   resh(C_), resh(xf)))
+        y = ys.swapaxes(0, 1).reshape(B, nc * chunk, di)[:, :S]
+    y = y + xf[:, :y.shape[1]] * p["D"]
+    return y, h_last
+
+
+def ssm_forward(p, x, cfg: ModelConfig, state=None):
+    """Full mamba layer over a sequence. x: (B,S,d).
+
+    state: None (fresh) or dict with h (B,di,n), conv (B,K-1,di).
+    Returns (y (B,S,d), new_state).
+    """
+    scfg = cfg.ssm
+    B, S, _ = x.shape
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    K = scfg.d_conv
+    if state is not None:
+        prev = state["conv"].astype(xi.dtype)             # (B,K-1,di)
+        xi_ext = jnp.concatenate([prev, xi], axis=1)
+        conv = _causal_conv(xi_ext, p["conv_w"], p["conv_b"])[:, K - 1:]
+        h0 = state["h"]
+    else:
+        conv = _causal_conv(xi, p["conv_w"], p["conv_b"])
+        di = xi.shape[-1]
+        h0 = jnp.zeros((B, di, scfg.d_state), jnp.float32)
+    act = jax.nn.silu(conv)
+    y, h_last = selective_scan(p, act, h0)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    new_state = {
+        "h": h_last,
+        "conv": (jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
+                 if state is not None else
+                 jnp.pad(xi, ((0, 0), (K - 1, 0), (0, 0))))[:, -(K - 1):]
+        .astype(jnp.bfloat16),
+    }
+    return y @ p["out_proj"], new_state
+
+
+def ssm_init_state(cfg: ModelConfig, batch: int):
+    scfg = cfg.ssm
+    di = scfg.expand * cfg.d_model
+    return {"h": jnp.zeros((batch, di, scfg.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, scfg.d_conv - 1, di), jnp.bfloat16)}

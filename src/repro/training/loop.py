@@ -1,0 +1,55 @@
+"""Training step factory + a minimal host-side training loop.
+
+``make_train_step(cfg)`` returns the pure (params, opt_state, batch) ->
+(params, opt_state, metrics) function that the launcher jits with mesh
+shardings; the same function lowers in the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.model import init_params, train_loss
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4,
+                    weight_decay: float = 0.01, remat: bool = True,
+                    grad_clip: float = 1.0) -> Callable:
+    def train_step(params, opt_state: AdamWState, batch):
+        def loss_fn(p):
+            return train_loss(p, cfg, batch, remat=remat)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, gnorm = adamw_update(
+            params, grads, opt_state, lr=lr, weight_decay=weight_decay,
+            grad_clip=grad_clip)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": opt_state.step}
+        return params, opt_state, metrics
+    return train_step
+
+
+def train(cfg: ModelConfig, data_iter, n_steps: int, *, seed: int = 0,
+          lr: float = 3e-4, remat: bool = False,
+          log_every: int = 10, callback: Optional[Callable] = None):
+    """Single-host training loop used by the examples (CPU-scale)."""
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg, lr=lr, remat=remat))
+    history = []
+    t0 = time.time()
+    for step in range(n_steps):
+        batch = next(data_iter)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == n_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["wall_s"] = time.time() - t0
+            history.append(m)
+            if callback:
+                callback(step, m)
+    return params, opt_state, history

@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests (deliverable f): reduced config, one
+forward/train step on CPU, asserting output shapes + no NaNs; plus
+prefill→decode cache consistency against the full-sequence oracle."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import ShapeConfig
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import layers as L
+from repro.models.inputs import make_batch
+from repro.models.model import (_apply_stack, _embed_inputs, _logits,
+                                decode_step, init_params, prefill,
+                                train_loss)
+
+B, S = 2, 24
+
+
+def _extras(cfg, rng, S1):
+    ex = {}
+    if cfg.family == "vlm":
+        ex["patch_embeds"] = jnp.asarray(rng.standard_normal(
+            (B, cfg.n_vision_tokens, cfg.d_model), dtype=np.float32),
+            jnp.bfloat16)
+        ex["mrope_pos"] = jnp.broadcast_to(
+            jnp.arange(S1, dtype=jnp.int32), (3, B, S1))
+    if cfg.family == "audio":
+        ex["frames"] = jnp.asarray(rng.standard_normal(
+            (B, 32, cfg.d_model), dtype=np.float32), jnp.bfloat16)
+    return ex
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jnp.asarray(rng.integers(3, cfg.vocab_size, (B, S),
+                                      dtype=np.int32))
+    batch = {"tokens": tokens, "labels": tokens, **_extras(cfg, rng, S)}
+    if cfg.family == "audio":
+        batch["labels"] = batch["tokens"]
+    loss = jax.jit(lambda p, b: train_loss(p, cfg, b, remat=False))(
+        params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), arch
+    # gradients flow and are finite
+    g = jax.grad(lambda p: train_loss(p, cfg, batch, remat=True))(params)
+    gn = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+             for l in jax.tree.leaves(g))
+    assert jnp.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:  # capacity drops differ by construction
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=100.0))
+    rng = np.random.default_rng(3)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    tokens = jnp.asarray(rng.integers(5, cfg.vocab_size, (B, S + 1),
+                                      dtype=np.int32))
+    ex = _extras(cfg, rng, S + 1)
+
+    def full_logits(t):
+        batch = {"tokens": tokens, **ex}
+        memory = None
+        if cfg.n_enc_layers:
+            from repro.models.model import _encode
+            memory = _encode(params, cfg, batch["frames"])
+        x, positions = _embed_inputs(params, cfg, batch)
+        x, _, _ = _apply_stack(params, cfg, x, mode="train",
+                               positions=positions, memory=memory,
+                               remat=False)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return _logits(params, cfg, x)[:, t]
+
+    pb = {"tokens": tokens[:, :S]}
+    if cfg.family == "vlm":
+        pb.update(patch_embeds=ex["patch_embeds"],
+                  mrope_pos=ex["mrope_pos"][:, :, :S])
+    if cfg.family == "audio":
+        pb.update(frames=ex["frames"])
+    logits_p, cache = prefill(params, cfg, pb, cache_len=S + 8)
+    db = {"tokens": tokens[:, S:S + 1]}
+    if cfg.family == "vlm":
+        db["mrope_pos"] = ex["mrope_pos"][:, :, S:S + 1]
+    logits_d, _ = decode_step(params, cfg, cache, db)
+
+    scale = float(jnp.max(jnp.abs(full_logits(S)))) + 1e-6
+    assert float(jnp.max(jnp.abs(logits_p - full_logits(S - 1)))) \
+        < 0.05 * scale + 0.05
+    assert float(jnp.max(jnp.abs(logits_d - full_logits(S)))) \
+        < 0.05 * scale + 0.05
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_dims_match_assignment(arch):
+    cfg = get_config(arch)
+    assigned = {
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == assigned, (arch, got, assigned)
+
+
+def test_moe_config_details():
+    arctic = get_config("arctic-480b")
+    assert arctic.moe.n_experts == 128 and arctic.moe.top_k == 2
+    assert arctic.moe.dense_residual_ff == 4864
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.moe.n_experts == 384 and kimi.moe.top_k == 8

@@ -1,0 +1,92 @@
+"""HLO static analysis: trip-count scaling + collective accounting."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_stats import (collective_stats,
+                                    computation_multipliers, hlo_profile)
+
+
+def test_scan_trip_count_scaling():
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), ()
+        h, _ = jax.lax.scan(body, x, None, length=10)
+        return h
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = jax.jit(f).lower(x, w).compile()
+    prof = hlo_profile(c.as_text(), 1)
+    expect = 10 * 2 * 128 * 256 * 256
+    assert prof["dot_flops_scaled"] == pytest.approx(expect, rel=0.01)
+    # bytes: each iteration reads h + w and writes h at minimum
+    per_iter = (128 * 256 + 256 * 256 + 128 * 256) * 4
+    assert prof["bytes_scaled"] >= 10 * per_iter * 0.9
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(h, _):
+            def inner(g, _):
+                return g @ w, ()
+            g, _ = jax.lax.scan(inner, h, None, length=3)
+            return g, ()
+        h, _ = jax.lax.scan(outer, x, None, length=4)
+        return h
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = jax.jit(f).lower(x, w).compile()
+    prof = hlo_profile(c.as_text(), 1)
+    expect = 12 * 2 * 64 * 64 * 64
+    assert prof["dot_flops_scaled"] == pytest.approx(expect, rel=0.05)
+
+
+SYNTH_HLO = """
+HloModule synth
+
+%body.1 (p: (s32[], f32[128,64])) -> (s32[], f32[128,64]) {
+  %p = (s32[], f32[128,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,64]{1,0} get-tuple-element(%p), index=1
+  %ag = f32[128,256]{1,0} all-gather(%x), replica_groups=[32,4]<=[128], dimensions={1}
+  %r = f32[128,64]{1,0} slice(%ag), slice={[0:128],[0:64]}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,64]) tuple(%ni, %r)
+}
+
+%cond.1 (p: (s32[], f32[128,64])) -> pred[] {
+  %p = (s32[], f32[128,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[128,64]) -> f32[128,64] {
+  %a = f32[128,64]{1,0} parameter(0)
+  %ar = f32[128,64]{1,0} all-reduce(%a), replica_groups=[1,128]<=[128], to_apply=%add.1
+  %z = s32[] constant(0)
+  %init = (s32[], f32[128,64]) tuple(%z, %ar)
+  %w = (s32[], f32[128,64]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[128,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_stats_synthetic():
+    st = collective_stats(SYNTH_HLO, 128)
+    # all-gather inside while body: out 128*256*4 bytes, g=4, trips=7
+    ag = 128 * 256 * 4 * (3 / 4) * 7
+    # all-reduce at entry: 2 * size * (g-1)/g
+    ar = 2 * 128 * 64 * 4 * (127 / 128)
+    assert st["bytes_all-gather"] == pytest.approx(ag, rel=0.01)
+    assert st["bytes_all-reduce"] == pytest.approx(ar, rel=0.01)
+    assert st["collective_bytes"] == pytest.approx(ag + ar, rel=0.01)
+
+
+def test_multipliers_entry_is_one():
+    comps, mult = computation_multipliers(SYNTH_HLO)
+    assert mult["__entry__"] == 1.0
+    assert mult["body.1"] == 7.0

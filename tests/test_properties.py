@@ -1,0 +1,127 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.env.evaluator import rouge_l
+from repro.kernels.ref import attention_ref
+from repro.models.layers import attention
+from repro.serving.tokenizer import TOKENIZER, count_tokens
+
+# --------------------------------------------------------------- tokenizer --
+
+texts = st.text(alphabet=st.characters(min_codepoint=32, max_codepoint=126),
+                min_size=0, max_size=200)
+
+
+@given(texts)
+@settings(max_examples=100, deadline=None)
+def test_tokenizer_deterministic_and_bounded(t):
+    a, b = TOKENIZER.encode(t), TOKENIZER.encode(t)
+    assert a == b
+    assert all(0 <= i < TOKENIZER.vocab_size for i in a)
+    # token count grows at most ~linearly with characters
+    assert len(a) <= max(4, len(t))
+
+
+@given(texts, texts)
+@settings(max_examples=50, deadline=None)
+def test_tokenizer_concat_superadditive(a, b):
+    """Concatenation cannot produce fewer tokens than the longer part."""
+    whole = count_tokens(a + " " + b)
+    assert whole >= max(count_tokens(a), count_tokens(b))
+
+
+# ------------------------------------------------------------------ rouge --
+
+@given(st.lists(st.sampled_from("abcdefg"), min_size=1, max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_rouge_identity(words):
+    s = " ".join(words)
+    assert rouge_l(s, s) == pytest.approx(1.0)
+
+
+@given(st.lists(st.sampled_from("ab"), min_size=1, max_size=15),
+       st.lists(st.sampled_from("cd"), min_size=1, max_size=15))
+@settings(max_examples=40, deadline=None)
+def test_rouge_disjoint_zero(a, b):
+    assert rouge_l(" ".join(a), " ".join(b)) == 0.0
+
+
+@given(st.lists(st.sampled_from("abcde"), min_size=1, max_size=20),
+       st.lists(st.sampled_from("abcde"), min_size=1, max_size=20))
+@settings(max_examples=60, deadline=None)
+def test_rouge_symmetric_bounded(a, b):
+    r1 = rouge_l(" ".join(a), " ".join(b))
+    r2 = rouge_l(" ".join(b), " ".join(a))
+    assert 0.0 <= r1 <= 1.0
+    assert r1 == pytest.approx(r2)
+
+
+# -------------------------------------------------- chunked attention ------
+
+@given(st.integers(1, 2), st.sampled_from([1, 2, 4]),
+       st.sampled_from([64, 96, 128]), st.sampled_from([16, 32]),
+       st.booleans(), st.sampled_from([0, 32]))
+@settings(max_examples=25, deadline=None)
+def test_chunked_attention_matches_ref(B, G, S, hd, causal, window):
+    """The scan-chunked attention (model fast path) must equal the naive
+    masked-softmax oracle for any shape/mask combination."""
+    rng = np.random.default_rng(B * 1000 + G * 100 + S + hd)
+    Hkv = 2
+    Hq = Hkv * G
+    q = jnp.asarray(rng.standard_normal((B, Hq, S, hd), dtype=np.float32))
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, hd), dtype=np.float32))
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, hd), dtype=np.float32))
+    out = attention(q, k, v, causal=causal, window=window, chunk=32)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-3
+
+
+# ----------------------------------------------------------- MoE invariants --
+
+@given(st.integers(2, 4), st.sampled_from([8, 16]), st.sampled_from([1, 2]))
+@settings(max_examples=20, deadline=None)
+def test_moe_router_weights_normalized(B, E, k):
+    from repro.kernels.ref import router_topk_ref
+    rng = np.random.default_rng(B * 31 + E + k)
+    logits = jnp.asarray(rng.standard_normal((B * 8, E), dtype=np.float32))
+    w, idx, probs = router_topk_ref(logits, k)
+    assert jnp.allclose(jnp.sum(w, -1), 1.0, atol=1e-5)
+    # indices are distinct per token
+    for row in np.asarray(idx):
+        assert len(set(row.tolist())) == k
+
+
+# ------------------------------------------------------------ data packing --
+
+@given(st.integers(1, 4), st.sampled_from([32, 64]))
+@settings(max_examples=20, deadline=None)
+def test_packing_shapes_and_alignment(batch, seq):
+    from repro.training.data import PackedLMDataset, synthetic_docs
+    ds = PackedLMDataset(synthetic_docs(512, seed=1), batch, seq, 512)
+    b = next(iter(ds))
+    assert b["tokens"].shape == (batch, seq)
+    assert b["labels"].shape == (batch, seq)
+    # labels are next-token-shifted tokens
+    chunk_flat = np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1)
+    assert np.array_equal(b["labels"][:, :-1], chunk_flat[:, 1:-1])
+
+
+# ------------------------------------------------------------- accounting --
+
+@given(st.lists(st.tuples(texts, texts), min_size=1, max_size=10))
+@settings(max_examples=30, deadline=None)
+def test_ledger_totals(entries):
+    from repro.core.accounting import TokenLedger
+    led = TokenLedger()
+    for p, c in entries:
+        led.record("plan", p, c)
+    assert led.total_tokens == led.prompt_tokens + led.completion_tokens
+    assert led.n_requests == len(entries)
+    assert led.total_tokens == sum(count_tokens(p) + count_tokens(c)
+                                   for p, c in entries)
