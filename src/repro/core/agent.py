@@ -9,6 +9,15 @@ Implements the paper's runtime exactly:
   3. fallback: if the planner reports TOOL_NOT_FOUND (the gate was too
      narrow), the agent reverts to the FULL toolset for this task and
      continues — "the agent being instructed via prompting to revert".
+
+The loop is factored into a resumable ``AgentSession`` so the serving
+pipeline (serving/pipeline.py) can interleave many sessions — gate a
+whole admission wave in one batched classifier call, then advance the
+sessions round-robin like continuous batching at the agent level.
+``run_task`` remains the sequential entry point and is exactly
+equivalent: per-session state (workspace rng, planner rng, ledger) is
+isolated, so the interleaving order cannot change any task's outcome
+(see DESIGN.md §Pipeline concurrency).
 """
 from __future__ import annotations
 
@@ -20,7 +29,7 @@ import numpy as np
 from repro.core.accounting import TokenLedger
 from repro.core.gate import IntentGate
 from repro.core.planner import PlannerConfig, PlanStep, ScriptedPlanner
-from repro.core.tools import ToolRegistry
+from repro.core.tools import Tool, ToolRegistry
 from repro.env.tasks import Task
 from repro.env.tools_impl import ToolError, Workspace, execute_tool
 from repro.env.world import World
@@ -38,6 +47,34 @@ class TaskResult:
     executed_tools: List[str] = field(default_factory=list)
 
 
+@dataclass
+class AgentSession:
+    """One task's in-flight state, advanced one planner step at a time."""
+    task: Task
+    workspace: Workspace
+    ledger: TokenLedger
+    planner: ScriptedPlanner
+    visible: Dict[str, Tool]
+    catalog: str
+    history: List[str] = field(default_factory=list)
+    executed: List[str] = field(default_factory=list)
+    intent: Optional[str] = None
+    gated: bool = False
+    fallback_used: bool = False
+    completed: bool = False
+    done: bool = False
+    steps: int = 0
+    index: int = 0              # arrival order (pipeline bookkeeping)
+
+    def result(self) -> TaskResult:
+        return TaskResult(task=self.task, workspace=self.workspace,
+                          ledger=self.ledger,
+                          completed_plan=self.completed,
+                          fallback_used=self.fallback_used,
+                          intent_predicted=self.intent, steps=self.steps,
+                          executed_tools=self.executed)
+
+
 class Agent:
     def __init__(self, registry: ToolRegistry, world: World,
                  planner_cfg: PlannerConfig,
@@ -48,69 +85,87 @@ class Agent:
         self.gate = gate
         self.seed = seed
 
-    def run_task(self, task: Task, task_seed: int = 0) -> TaskResult:
+    # ------------------------------------------------------- session API ----
+    def start_session(self, task: Task, task_seed: int = 0) -> AgentSession:
+        """Create the per-task state; does NOT run the gate yet (the
+        pipeline gates whole admission waves in one batched call)."""
         rng = np.random.default_rng(hash((self.seed, task_seed)) % 2**32)
         ws = Workspace(world=self.world, rng=rng,
                        temperature=self.planner_cfg.temperature)
-        ledger = TokenLedger()
         planner = ScriptedPlanner(self.planner_cfg, self.registry,
                                   seed=int(rng.integers(0, 2**31)))
         planner.start_task(task)
+        return AgentSession(task=task, workspace=ws, ledger=TokenLedger(),
+                            planner=planner,
+                            visible=dict(self.registry.tools),
+                            catalog=self.registry.catalog_text())
 
-        intent = None
-        fallback_used = False
+    def apply_gate_result(self, session: AgentSession, intent: str,
+                          libs: Tuple[str, ...]):
+        """Install an (already ledger-charged) gate decision."""
+        session.intent = intent
+        session.visible = {t.name: t
+                           for t in self.registry.by_library(libs)}
+        session.catalog = self.registry.catalog_text(libs)
+        session.gated = True
+
+    def gate_session(self, session: AgentSession):
+        """Single-query gate call (the sequential path)."""
         if self.gate is not None:
-            intent, libs = self.gate(task.query, ledger)
-            visible = {t.name: t for t in self.registry.by_library(libs)}
-            catalog = self.registry.catalog_text(libs)
+            intent, libs = self.gate(session.task.query, session.ledger)
+            self.apply_gate_result(session, intent, libs)
+
+    def step_session(self, session: AgentSession) -> bool:
+        """One planner step (one LLM request). Returns True when the
+        session has finished (plan complete or step budget exhausted)."""
+        if session.done:
+            return True
+        session.steps += 1
+        s = session
+        prompt = s.planner.serialize_prompt(s.task, s.catalog, s.history)
+        step = s.planner.next_step(s.task, s.visible, s.history)
+        s.ledger.record("plan", prompt,
+                        s.planner.serialize_completion(step))
+
+        if step.tool_not_found and s.gated and not s.fallback_used:
+            # GeckOpt fallback: revert to the full toolset
+            s.fallback_used = True
+            s.visible = dict(self.registry.tools)
+            s.catalog = self.registry.catalog_text()
+            s.planner.note_fallback()
+            s.history.append("Observation: TOOL_NOT_FOUND — reverting to "
+                             "the full tool catalog.")
+        elif step.final is not None:
+            s.completed = True
+            s.done = True
+        elif not step.calls:
+            s.history.append("Observation: (no action)")
         else:
-            visible = dict(self.registry.tools)
-            catalog = self.registry.catalog_text()
-
-        history: List[str] = []
-        executed: List[str] = []
-        completed = False
-        steps = 0
-        while steps < self.planner_cfg.max_steps:
-            steps += 1
-            prompt = planner.serialize_prompt(task, catalog, history)
-            step = planner.next_step(task, visible, history)
-            ledger.record("plan", prompt, planner.serialize_completion(step))
-
-            if step.tool_not_found and self.gate is not None and \
-                    not fallback_used:
-                # GeckOpt fallback: revert to the full toolset
-                fallback_used = True
-                visible = dict(self.registry.tools)
-                catalog = self.registry.catalog_text()
-                planner.note_fallback()
-                history.append("Observation: TOOL_NOT_FOUND — reverting to "
-                               "the full tool catalog.")
-                continue
-            if step.final is not None:
-                completed = True
-                break
-            if not step.calls:
-                history.append("Observation: (no action)")
-                continue
+            ws = s.workspace
             obs_parts = []
             for call in step.calls:
                 try:
                     out = execute_tool(ws, call.tool, call.args)
-                    executed.append(call.tool)
+                    s.executed.append(call.tool)
                     obs_parts.append(f"{call.tool} -> {out}")
                 except ToolError as e:
                     obs_parts.append(f"{call.tool} -> ERROR: {e}")
-            history.append("Observation: " + " | ".join(obs_parts))
-            history.append(
+            s.history.append("Observation: " + " | ".join(obs_parts))
+            s.history.append(
                 f"Workspace: {len(ws.handles)} handles loaded, "
                 f"{len(ws.map_layers)} map layers, "
                 f"{len(ws.detections)} detection sets, "
                 f"{len(ws.artifacts)} artifacts; last tools: "
-                f"{', '.join(executed[-4:]) or 'none'}")
+                f"{', '.join(s.executed[-4:]) or 'none'}")
 
-        return TaskResult(task=task, workspace=ws, ledger=ledger,
-                          completed_plan=completed,
-                          fallback_used=fallback_used,
-                          intent_predicted=intent, steps=steps,
-                          executed_tools=executed)
+        if s.steps >= self.planner_cfg.max_steps:
+            s.done = True
+        return s.done
+
+    # ---------------------------------------------------- sequential API ----
+    def run_task(self, task: Task, task_seed: int = 0) -> TaskResult:
+        session = self.start_session(task, task_seed)
+        self.gate_session(session)
+        while not self.step_session(session):
+            pass
+        return session.result()

@@ -7,14 +7,21 @@ backend is pluggable:
   * ScriptedIntentClassifier — GPT-4-proxy with a calibrated accuracy
     (keyword-matching plus seeded confusion), used by the Table-2 harness;
   * NeuralIntentClassifier — our own served planner-proxy model with a
-    constrained intent head (examples/train_planner.py trains it).
+    constrained intent head (examples/train_planner.py trains it);
+  * BatchedNeuralIntentClassifier — same decisions, but all queries of a
+    pipeline admission wave scored in ONE jitted forward pass
+    (serving/neural_planner.py).
 
-The gate prompt is real text and is charged to the ledger.
+Classifiers expose ``classify(query)`` and optionally
+``classify_batch(queries)``; ``IntentGate.batch`` uses the batched
+entry point when present so the serving pipeline amortizes the gate
+model call across concurrent sessions. The gate prompt is real text and
+is charged to each session's ledger either way.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -70,6 +77,17 @@ class ScriptedIntentClassifier:
             intent = others[int(self.rng.integers(0, len(others)))]
         return intent, intent
 
+    def classify_batch(self, queries: Sequence[str]
+                       ) -> List[Tuple[str, str]]:
+        """Batched entry point; draws from the SAME rng stream in query
+        order, so a wave-batched run reproduces the sequential one."""
+        return [self.classify(q) for q in queries]
+
+
+def gate_prompt(query: str) -> str:
+    """The serialized gate request (what the ledger charges)."""
+    return f"{GATE_SYSTEM}\n\nQuery: {query}\nIntent:"
+
 
 class IntentGate:
     def __init__(self, intent_map: IntentMap, classifier,
@@ -80,8 +98,26 @@ class IntentGate:
 
     def __call__(self, query: str, ledger: TokenLedger
                  ) -> Tuple[str, Tuple[str, ...]]:
-        prompt = f"{GATE_SYSTEM}\n\nQuery: {query}\nIntent:"
         intent, completion = self.classifier.classify(query)
-        ledger.record("gate", prompt, completion)
+        ledger.record("gate", gate_prompt(query), completion)
         libs = self.intent_map.libraries_for(intent, self.all_libraries)
         return intent, libs
+
+    def batch(self, queries: Sequence[str], ledgers: Sequence[TokenLedger]
+              ) -> List[Tuple[str, Tuple[str, ...]]]:
+        """Gate a whole admission wave. Uses the classifier's batched
+        forward when it has one; token accounting is identical to the
+        per-query path (each session is charged its own gate prompt)."""
+        assert len(queries) == len(ledgers)
+        if hasattr(self.classifier, "classify_batch"):
+            decisions = self.classifier.classify_batch(queries)
+        else:
+            decisions = [self.classifier.classify(q) for q in queries]
+        out = []
+        for query, ledger, (intent, completion) in zip(queries, ledgers,
+                                                       decisions):
+            ledger.record("gate", gate_prompt(query), completion)
+            out.append((intent,
+                        self.intent_map.libraries_for(
+                            intent, self.all_libraries)))
+        return out

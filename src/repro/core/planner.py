@@ -322,8 +322,12 @@ class ScriptedPlanner:
                 f"in the workspace.")
 
     # -- prompt serialization (REAL tokens) ----------------------------------
-    def serialize_prompt(self, task: Task, catalog_text: str,
-                         history: List[str]) -> str:
+    def serialize_prompt_prefix(self, catalog_text: str) -> str:
+        """The task-independent head of every planner prompt: system +
+        platform context + instructions + the (gated) catalog. Sessions
+        sharing an intent share this text verbatim — it is what the
+        engine's per-intent prefix cache prefills once (see DESIGN.md
+        §Pipeline concurrency)."""
         cfg = self.cfg
         parts = [SYSTEM_PROMPT, PLATFORM_CONTEXT, SESSION_DIGEST,
                  REACT_INSTRUCTIONS if cfg.mode == "react"
@@ -335,7 +339,12 @@ class ScriptedPlanner:
             "Session: geollm-engine v2.4 | project: default | mesh region "
             "cache warm | artifact store: workspace:// | time budget: "
             "standard | user tier: enterprise")
-        parts.append(f"Task: {task.query}")
+        return "\n".join(parts)
+
+    def serialize_prompt(self, task: Task, catalog_text: str,
+                         history: List[str]) -> str:
+        parts = [self.serialize_prompt_prefix(catalog_text),
+                 f"Task: {task.query}"]
         parts.extend(history)
         return "\n".join(parts)
 

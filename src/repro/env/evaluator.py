@@ -97,8 +97,17 @@ class EvalReport:
 
 def evaluate(agent: Agent, tasks: Sequence[Task], name: str = "run"
              ) -> EvalReport:
-    results = [agent.run_task(t, task_seed=i)
-               for i, t in enumerate(tasks)]
+    """Sequential harness: run tasks one at a time, then score. The
+    concurrent path (serving.pipeline.evaluate_pipeline) produces the
+    same TaskResults via interleaved sessions and shares
+    ``evaluate_results``."""
+    return evaluate_results(
+        [agent.run_task(t, task_seed=i) for i, t in enumerate(tasks)],
+        name)
+
+
+def evaluate_results(results: Sequence[TaskResult], name: str = "run"
+                     ) -> EvalReport:
     correct = [float(_task_correct(r)) for r in results]
     success = [float(_task_success(r)) for r in results]
 
@@ -166,5 +175,5 @@ def evaluate(agent: Agent, tasks: Sequence[Task], name: str = "run"
         tools_per_step=float(np.mean(tools)),
         fallback_rate=float(np.mean([r.fallback_used for r in results])),
         gate_tokens=float(np.mean(gate_toks)),
-        n_tasks=len(tasks),
+        n_tasks=len(results),
     )

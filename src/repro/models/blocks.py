@@ -6,6 +6,11 @@ kind vocabulary). ``block_apply`` is pure and mode-polymorphic:
   mode="train"   full-sequence forward, no cache
   mode="prefill" full-sequence forward, returns a filled KV/state cache
   mode="decode"  single-token forward against a pre-allocated cache
+  mode="extend"  multi-token continuation against a pre-filled cache
+                 (chunked prefill: writes S new K/V entries at
+                 [pos, pos+S) and attends with q_offset=pos; full
+                 attention + recurrent-state kinds only — the
+                 sliding-window ring buffer has no multi-token write)
 
 Caches are dicts of arrays sized by ``cache_len`` (full-attention kinds) or
 ``cfg.window`` (sliding-window kinds — ring buffers indexed by pos % W).
@@ -142,6 +147,22 @@ def _attn_sublayer(p, x, cfg, kind, mode, cache, pos, positions, cross=False,
             padk = lambda t: (jnp.pad(t, ((0, 0), (0, 0), (0, padlen), (0, 0)))
                               if padlen > 0 else t[:, :, :Sc])
             nk, nv = padk(k.astype(jnp.bfloat16)), padk(v.astype(jnp.bfloat16))
+        return L.out_proj(ap, out), {"k": nk, "v": nv}
+
+    if mode == "extend":
+        # chunked-prefill continuation: write the S new K/V rows at
+        # [pos, pos+S) of the cache (scalar pos), attend causally over
+        # the filled cache with absolute query positions.
+        if window:
+            raise NotImplementedError(
+                "extend over sliding-window ring buffers; decode "
+                "token-by-token instead")
+        nk = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(jnp.bfloat16), (0, 0, pos, 0))
+        nv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(jnp.bfloat16), (0, 0, pos, 0))
+        out = L.attention(q, nk, nv, causal=True, q_offset=pos,
+                          cap=cfg.attn_softcap, scale=cfg.attn_scale)
         return L.out_proj(ap, out), {"k": nk, "v": nv}
 
     # decode: x is (B,1,d); write k/v at slot, attend over valid entries.

@@ -238,6 +238,35 @@ def prefill(params, cfg: ModelConfig, batch, cache_len: int, seq_axis=None):
                     "pos": jnp.asarray(S, jnp.int32)}
 
 
+def prefill_extend(params, cfg: ModelConfig, cache, batch, n_valid=None):
+    """Chunked-prefill continuation: advance a pre-filled cache through S
+    new tokens in ONE pass (the engine's prompt-prefix cache uses this to
+    attach per-request suffixes to a shared prefix prefill).
+
+    batch["tokens"]: (B, S); cache carries a scalar ``pos``. ``n_valid``
+    (defaults to S) supports bucket-padded calls: logits are taken at
+    position n_valid-1 and ``pos`` advances by n_valid, so pad tokens
+    beyond it are never attended (causal mask) and their cache rows are
+    overwritten by later writes before becoming visible. Pad-extend is
+    only sound for pure-attention stacks — recurrent state (SSM/xLSTM)
+    would step through the pads. Sliding-window kinds raise
+    NotImplementedError (no multi-token ring-buffer write); enc-dec
+    stacks are unsupported.
+    """
+    assert not cfg.n_enc_layers, "prefill_extend: enc-dec unsupported"
+    pos = cache["pos"]
+    S = batch["tokens"].shape[1]
+    n_valid = S if n_valid is None else n_valid
+    x, positions = _embed_inputs(params, cfg, batch, pos=pos)
+    x, new_segs, _ = _apply_stack(params, cfg, x, mode="extend",
+                                  cache=cache, pos=pos,
+                                  positions=positions)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    logits = _logits(params, cfg, last)[:, 0]
+    return logits, {"segments": new_segs, "pos": pos + n_valid}
+
+
 def decode_step(params, cfg: ModelConfig, cache, batch):
     """One decode step. batch["tokens"]: (B,1). Returns (logits, cache)."""
     pos = cache["pos"]

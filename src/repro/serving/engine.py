@@ -6,6 +6,18 @@ one-hot masked updates so every slot can sit at a different fill level).
 Requests are prefilled on arrival (B=1) and their caches inserted into a
 free slot; one ``decode_step`` advances every active slot together.
 
+Two serving-pipeline extensions (see DESIGN.md §Pipeline concurrency):
+
+  * **prompt-prefix caching** — ``register_prefix`` prefills a shared
+    prompt prefix (e.g. the gated system prompt of one GeckOpt intent)
+    once; requests tagged with that ``prefix_key`` reuse the cached
+    prefill and only extend it with their suffix tokens, instead of
+    recomputing the full prefix per slot;
+  * **sessions** — ``open_session`` returns an ``EngineSession`` that
+    multiplexes the turns of one Copilot conversation over the shared
+    continuous-batching slots (each turn is one request tagged with the
+    session's intent prefix).
+
 This is the single-host engine the examples serve the planner with; the
 distributed story (pjit over the production mesh) reuses exactly the same
 step functions via launch/serve.py.
@@ -20,8 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.config import ModelConfig
-from repro.models.model import decode_step, init_cache, prefill
+from repro.common.config import ModelConfig, WINDOW_KINDS
+from repro.models.model import (decode_step, init_cache, prefill,
+                                prefill_extend)
 from repro.serving.sampling import SamplerConfig, sample
 from repro.serving.tokenizer import SPECIALS, TOKENIZER
 
@@ -32,12 +45,21 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 32
     sampler: SamplerConfig = field(default_factory=SamplerConfig)
+    prefix_key: Optional[str] = None
+    session_id: Optional[int] = None
     # filled by the engine:
     output: List[int] = field(default_factory=list)
     done: bool = False
     enqueue_t: float = 0.0
     first_token_t: float = 0.0
     finish_t: float = 0.0
+
+
+@dataclass
+class CachedPrefix:
+    ids: List[int]
+    cache: dict          # B=1 prefilled cache pytree (scalar pos)
+    logits: jnp.ndarray  # (1,V) logits after the prefix's last token
 
 
 def _insert_slot(batched, single, slot: int):
@@ -66,27 +88,128 @@ class InferenceEngine:
         self.cache["pos"] = jnp.zeros((max_batch,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: List[Request] = []
+        self.prefixes: Dict[str, CachedPrefix] = {}
         self._next_id = 0
+        self._next_session = 0
         self.stats = {"decode_steps": 0, "prefills": 0,
-                      "tokens_generated": 0}
+                      "tokens_generated": 0, "prefix_hits": 0,
+                      "prefix_tokens_saved": 0}
 
         self._prefill = jax.jit(
             lambda p, b: prefill(p, cfg, b, cache_len=cache_len))
         self._decode = jax.jit(lambda p, c, b: decode_step(p, cfg, c, b))
+        self._extend = jax.jit(
+            lambda p, c, b, n: prefill_extend(p, cfg, c, b, n_valid=n))
+        kinds = {k for unit, _ in cfg.segments for k in unit}
+        # multi-token cache extension: no ring buffers / cross-attention;
+        # bucket-padded extends additionally require a stateless
+        # (pure-attention) stack — recurrent state would step through pads
+        self._can_extend = (not (kinds & set(WINDOW_KINDS))
+                            and "encdec" not in kinds
+                            and not cfg.n_enc_layers)
+        self._pad_extend = (self._can_extend
+                            and kinds <= {"full", "dense", "moe"})
         self._last_tokens = jnp.zeros((max_batch, 1), jnp.int32)
 
     # ------------------------------------------------------------- API ----
     def add_request(self, prompt_text_or_ids, max_new_tokens: int = 32,
-                    sampler: SamplerConfig = SamplerConfig()) -> int:
+                    sampler: SamplerConfig = SamplerConfig(),
+                    prefix_key: Optional[str] = None,
+                    session_id: Optional[int] = None) -> int:
         ids = (TOKENIZER.encode_with_specials(prompt_text_or_ids)
                if isinstance(prompt_text_or_ids, str)
                else list(prompt_text_or_ids))
         req = Request(self._next_id, ids, max_new_tokens, sampler,
+                      prefix_key=prefix_key, session_id=session_id,
                       enqueue_t=time.time())
         self._next_id += 1
         self.queue.append(req)
         return req.request_id
 
+    # -------------------------------------------------- prefix caching ----
+    def register_prefix(self, key: str, prefix_text_or_ids) -> int:
+        """Prefill a shared prompt prefix ONCE and cache the result.
+        Returns the prefix length in tokens. Requests whose prompt starts
+        with these ids (pass ``prefix_key=key``) skip the prefix prefill.
+        Text prefixes are encoded as <bos> + tokens (no <eos>) so they
+        concatenate with the rest of the prompt; split at whitespace.
+
+        Prefixes longer than the attention q-chunk are prefilled on
+        their chunk-aligned head and decode-extended over the tail (the
+        prefill path requires Sq % attn_chunk == 0 above one chunk)."""
+        from repro.common.perf import get_flags
+        ids = ([SPECIALS["<bos>"]] + TOKENIZER.encode(prefix_text_or_ids)
+               if isinstance(prefix_text_or_ids, str)
+               else list(prefix_text_or_ids))
+        assert len(ids) < self.cache_len, (len(ids), self.cache_len)
+        align = get_flags().attn_chunk
+        head = (ids if len(ids) <= align
+                else ids[:(len(ids) // align) * align])
+        prompt = jnp.asarray(head, jnp.int32)[None, :]
+        logits, cache = self._prefill(self.params, {"tokens": prompt})
+        self.stats["prefills"] += 1
+        cache = dict(cache)
+        cache["pos"] = jnp.asarray(len(head), jnp.int32)
+        logits, cache = self._decode_through(logits, cache,
+                                             ids[len(head):])
+        self.prefixes[key] = CachedPrefix(ids, cache, logits)
+        return len(ids)
+
+    def _decode_through(self, logits, cache, tokens: List[int]
+                        ) -> Tuple[jnp.ndarray, dict]:
+        """Advance a B=1 cache through new tokens. Uses multi-token
+        ``prefill_extend`` calls when the stack supports them (chunked
+        prefill: whole attn_chunk slabs, then one bucket-padded call for
+        the remainder so jit retraces O(log n) shapes); falls back to
+        token-by-token decode otherwise. Returns (last-token logits
+        (1,V), extended cache)."""
+        from repro.common.perf import get_flags
+        toks = list(tokens)
+        if not toks:
+            return logits, cache
+        if not self._can_extend:
+            for t in toks:
+                logits, cache = self._decode(
+                    self.params, cache, {"tokens": jnp.asarray(
+                        [[t]], jnp.int32)})
+            return logits, cache
+        align = get_flags().attn_chunk
+        i = 0
+        while len(toks) - i >= align:
+            chunk = jnp.asarray(toks[i:i + align], jnp.int32)[None]
+            logits, cache = self._extend(self.params, cache,
+                                         {"tokens": chunk}, align)
+            i += align
+        rest = toks[i:]
+        if rest:
+            n = len(rest)
+            # pad rows are written at [pos+n, pos+width); cap width at
+            # the cache end — dynamic_update_slice would otherwise CLAMP
+            # the start index and silently overwrite valid prefix rows
+            room = self.cache_len - int(cache["pos"])
+            if self._pad_extend and n < room:
+                width = min(1 << (n - 1).bit_length(), room)
+                rest = rest + [0] * (width - n)
+            chunk = jnp.asarray(rest, jnp.int32)[None]
+            logits, cache = self._extend(self.params, cache,
+                                         {"tokens": chunk}, n)
+        return logits, cache
+
+    def _extend_prefix(self, pref: CachedPrefix, suffix: List[int]
+                       ) -> Tuple[jnp.ndarray, dict]:
+        """Advance a cached prefix cache through the suffix tokens."""
+        cache = {"segments": pref.cache["segments"],
+                 "pos": pref.cache["pos"]}
+        return self._decode_through(pref.logits, cache, suffix)
+
+    # ------------------------------------------------------- sessions ----
+    def open_session(self, prefix_key: Optional[str] = None
+                     ) -> "EngineSession":
+        sid = self._next_session
+        self._next_session += 1
+        return EngineSession(self, sid, prefix_key)
+
+    # ---------------------------------------------------- scheduling ----
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
@@ -95,16 +218,25 @@ class InferenceEngine:
             if not self.queue:
                 break
             req = self.queue.pop(0)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, cache1 = self._prefill(self.params,
-                                           {"tokens": prompt})
-            self.stats["prefills"] += 1
+            pref = (self.prefixes.get(req.prefix_key)
+                    if req.prefix_key else None)
+            if pref is not None and len(req.prompt) > len(pref.ids) and \
+                    len(req.prompt) < self.cache_len and \
+                    req.prompt[:len(pref.ids)] == pref.ids:
+                logits, cache1 = self._extend_prefix(
+                    pref, req.prompt[len(pref.ids):])
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_tokens_saved"] += len(pref.ids)
+            else:
+                prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                logits, cache1 = self._prefill(self.params,
+                                               {"tokens": prompt})
+                self.stats["prefills"] += 1
+                cache1 = dict(cache1)
             self.rng, k = jax.random.split(self.rng)
             tok = sample(logits, k, req.sampler)
             req.output.append(int(tok[0]))
             req.first_token_t = time.time()
-            cache1 = dict(cache1)
-            cache1["pos"] = jnp.asarray([len(req.prompt)], jnp.int32)
             self.cache = _insert_slot(self.cache, cache1, slot)
             self.cache["pos"] = self.cache["pos"].at[slot].set(
                 len(req.prompt))
@@ -152,3 +284,40 @@ class InferenceEngine:
 
     def throughput_stats(self) -> Dict[str, float]:
         return dict(self.stats)
+
+
+@dataclass
+class EngineSession:
+    """One Copilot conversation multiplexed over the engine's slots.
+
+    Each planner/gate turn becomes one engine request tagged with the
+    session's ``prefix_key`` (its gated intent), so every turn of every
+    session sharing an intent reuses the same cached system-prompt
+    prefill. Turns from many sessions interleave freely in the slot pool
+    — the engine does not reserve a slot per session.
+    """
+    engine: InferenceEngine
+    session_id: int
+    prefix_key: Optional[str] = None
+    pending: List[int] = field(default_factory=list)
+    turns: List[Request] = field(default_factory=list)
+
+    def submit_turn(self, text: str, max_new_tokens: int = 16,
+                    sampler: SamplerConfig = SamplerConfig()) -> int:
+        rid = self.engine.add_request(text, max_new_tokens, sampler,
+                                      prefix_key=self.prefix_key,
+                                      session_id=self.session_id)
+        self.pending.append(rid)
+        return rid
+
+    def collect(self, finished: List[Request]) -> List[Request]:
+        """Claim this session's turns from an engine ``step`` result."""
+        mine = [r for r in finished if r.request_id in self.pending]
+        for r in mine:
+            self.pending.remove(r.request_id)
+            self.turns.append(r)
+        return mine
+
+    @property
+    def idle(self) -> bool:
+        return not self.pending

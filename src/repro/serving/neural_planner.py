@@ -5,6 +5,12 @@ real model: the planner-proxy LM scores each intent label as a
 continuation of the gate prompt (constrained decoding over the 8-way
 intent grammar — no free-form generation can escape the taxonomy).
 
+``BatchedNeuralIntentClassifier`` makes the same decisions but scores
+every (query, intent) pair of a pipeline admission wave in ONE jitted
+``(Q*8, L)`` forward pass instead of Q*8 sequential B=1 calls — the gate
+hot path of serving/pipeline.py (benchmarks/pipeline_bench.py measures
+the speedup; tests/test_pipeline.py proves decision equivalence).
+
 ``make_intent_dataset`` builds (query -> intent) LM training pairs from
 the task generator; examples/train_planner.py fine-tunes the proxy on
 them and plugs the result into the Table-2 harness.
@@ -19,7 +25,8 @@ import numpy as np
 
 from repro.common.config import ModelConfig
 from repro.core.intents import INTENTS
-from repro.models.model import train_loss
+from repro.models import layers as L
+from repro.models.model import _apply_stack, _embed_inputs, _logits
 from repro.serving.tokenizer import TOKENIZER
 
 
@@ -51,15 +58,52 @@ def make_intent_dataset(tasks, seq_len: int = 64, batch: int = 16):
     return batches()
 
 
+def per_example_loss(params, cfg: ModelConfig, batch,
+                     chunk: int = 16) -> jnp.ndarray:
+    """Per-row masked LM loss (B,) — ``train_loss`` without the
+    cross-example mean, chunked over S so (B,S,V) logits never
+    materialize. MoE aux loss is omitted: it is a load-balancing
+    regularizer, not a per-example likelihood (the intent argmin only
+    compares label-token losses)."""
+    x, positions = _embed_inputs(params, cfg, batch)
+    x, _, _ = _apply_stack(params, cfg, x, mode="train",
+                           positions=positions, remat=False)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    xs = x.reshape(B, nc, chunk, d).swapaxes(0, 1)
+    ls = batch["labels"].reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def body(acc, inp):
+        xc, lc = inp
+        logits = _logits(params, cfg, xc)                  # (B,C,V) fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        loss = jnp.sum((lse - picked) * mask, axis=-1)     # (B,)
+        return (acc[0] + loss, acc[1] + jnp.sum(mask, axis=-1)), ()
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((B,)), jnp.zeros((B,))), (xs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
 class NeuralIntentClassifier:
-    """Scores each intent by LM loss of its label continuation."""
+    """Scores each intent by LM loss of its label continuation.
+
+    Scoring uses ``per_example_loss`` (pure label-token likelihood, MoE
+    aux excluded) so the batched classifier's single-pass decisions
+    match this one by construction on every stack kind."""
 
     def __init__(self, cfg: ModelConfig, params, seq_len: int = 64):
         self.cfg = cfg
         self.params = params
         self.seq_len = seq_len
         self._loss = jax.jit(
-            lambda p, b: train_loss(p, cfg, b, remat=False))
+            lambda p, b: per_example_loss(p, cfg, b)[0])
 
     def classify(self, query: str) -> Tuple[str, str]:
         losses = []
@@ -71,6 +115,63 @@ class NeuralIntentClassifier:
         best = INTENTS[int(np.argmin(losses))]
         return best, best
 
+    def classify_batch(self, queries: Sequence[str]
+                       ) -> List[Tuple[str, str]]:
+        return [self.classify(q) for q in queries]
+
     def accuracy(self, tasks) -> float:
         hits = sum(self.classify(t.query)[0] == t.intent for t in tasks)
+        return hits / max(len(tasks), 1)
+
+
+class BatchedNeuralIntentClassifier:
+    """Same decisions as ``NeuralIntentClassifier``, one forward pass.
+
+    All Q queries × 8 intents are encoded into a single ``(Q*8, L)``
+    batch and scored by one jitted ``per_example_loss`` call; the intent
+    with the minimum label-suffix loss wins per query. Row counts are
+    padded to a power of two (by repeating the last row) so jit retraces
+    O(log Q) times across varying pipeline wave sizes, not once per Q.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, seq_len: int = 64):
+        self.cfg = cfg
+        self.params = params
+        self.seq_len = seq_len
+        self._losses = jax.jit(
+            lambda p, b: per_example_loss(p, cfg, b))
+
+    def _encode_rows(self, queries: Sequence[str]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        pairs = [encode_pair(q, intent, self.seq_len)
+                 for q in queries for intent in INTENTS]
+        return (np.stack([p[0] for p in pairs]),
+                np.stack([p[1] for p in pairs]))
+
+    def losses(self, queries: Sequence[str]) -> np.ndarray:
+        """(Q, 8) label-suffix loss matrix for all queries/intents."""
+        toks, labs = self._encode_rows(queries)
+        rows = toks.shape[0]
+        padded = max(8, 1 << (rows - 1).bit_length())
+        if padded > rows:
+            reps = padded - rows
+            toks = np.concatenate([toks, np.repeat(toks[-1:], reps, 0)])
+            labs = np.concatenate([labs, np.repeat(labs[-1:], reps, 0)])
+        out = self._losses(self.params, {"tokens": jnp.asarray(toks),
+                                         "labels": jnp.asarray(labs)})
+        return np.asarray(out)[:rows].reshape(len(queries), len(INTENTS))
+
+    def classify_batch(self, queries: Sequence[str]
+                       ) -> List[Tuple[str, str]]:
+        if not queries:
+            return []
+        best = np.argmin(self.losses(queries), axis=1)
+        return [(INTENTS[int(i)],) * 2 for i in best]
+
+    def classify(self, query: str) -> Tuple[str, str]:
+        return self.classify_batch([query])[0]
+
+    def accuracy(self, tasks) -> float:
+        decisions = self.classify_batch([t.query for t in tasks])
+        hits = sum(d[0] == t.intent for d, t in zip(decisions, tasks))
         return hits / max(len(tasks), 1)

@@ -1,0 +1,188 @@
+"""Concurrent GeckOpt request pipeline: gate → plan → execute for many
+Copilot sessions at once.
+
+The paper's setting is a massively parallel Copilot platform ("over 100
+GPT-4-Turbo nodes"); the sequential Table-2 loop (one task to
+completion, then the next) models its *token* economics but not its
+*serving* shape. This module runs N sessions through the three stages
+concurrently, the way a real fleet does:
+
+  1. **Admission.** Pending tasks are admitted in arrival order until
+     ``max_concurrent`` sessions are in flight (a fresh wave whenever
+     slots free up).
+  2. **Batched gating.** Each admission wave is classified in ONE
+     batched gate call (``IntentGate.batch``): with a
+     ``BatchedNeuralIntentClassifier`` that is a single jitted
+     ``(Q*8, L)`` forward pass over every (query, intent) pair instead
+     of Q*8 sequential B=1 calls.
+  3. **Interleaved planning.** Active sessions advance round-robin, one
+     planner step per pipeline tick — continuous batching at the agent
+     level. Per-session state (workspace rng, planner rng, ledger) is
+     isolated and the World is read-only, so results are bit-identical
+     to the sequential harness at the same seed
+     (tests/test_pipeline.py asserts this; DESIGN.md §Pipeline
+     concurrency has the argument).
+
+Optionally the pipeline mirrors its LLM traffic onto a real
+``InferenceEngine``: every session's planner prompt shares a per-intent
+prefix (the gated system prompt + catalog, see
+``ScriptedPlanner.serialize_prompt_prefix``), which the engine prefills
+once per intent and reuses across all sessions via its prompt-prefix
+cache — examples/serve_pipeline.py and benchmarks/pipeline_bench.py
+drive this path.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.agent import Agent, AgentSession, TaskResult
+from repro.env.evaluator import EvalReport, evaluate_results
+from repro.env.tasks import Task
+from repro.serving.sampling import SamplerConfig
+
+
+@dataclass
+class PipelineConfig:
+    max_concurrent: int = 16     # in-flight session cap (slot pool)
+    gate_batch: int = 32         # max queries per batched gate call
+    # engine mirroring: serve each session's first planner turn through
+    # the InferenceEngine with per-intent prefix caching
+    engine_turns: bool = True
+    engine_max_new_tokens: int = 8
+
+
+@dataclass
+class PipelineStats:
+    admitted: int = 0
+    gate_batches: int = 0
+    gate_batch_sizes: List[int] = field(default_factory=list)
+    ticks: int = 0               # round-robin sweeps over active sessions
+    peak_concurrent: int = 0
+    engine_turns: int = 0
+
+    def summary(self) -> Dict[str, float]:
+        sizes = self.gate_batch_sizes or [0]
+        return {"admitted": self.admitted,
+                "gate_batches": self.gate_batches,
+                "mean_gate_batch": sum(sizes) / max(len(sizes), 1),
+                "ticks": self.ticks,
+                "peak_concurrent": self.peak_concurrent,
+                "engine_turns": self.engine_turns}
+
+
+class GeckOptPipeline:
+    """Drives many agent sessions through gate → plan → execute.
+
+    ``engine`` is optional: without it the pipeline is the pure
+    agent-level scheduler the Table-2 harness uses; with it, planner
+    turns are additionally served by the continuous-batching engine so
+    prefix-cache reuse and tokens/s are measurable.
+    """
+
+    def __init__(self, agent: Agent, config: Optional[PipelineConfig]
+                 = None, engine=None):
+        self.agent = agent
+        self.config = config or PipelineConfig()
+        self.engine = engine
+        self.stats = PipelineStats()
+        self._engine_sessions = []
+
+    # ---------------------------------------------------------- stages ----
+    def _admit(self, queue: deque, active: List[AgentSession]
+               ) -> List[AgentSession]:
+        wave: List[AgentSession] = []
+        while queue and len(active) + len(wave) < \
+                self.config.max_concurrent:
+            index, task = queue.popleft()
+            session = self.agent.start_session(task, task_seed=index)
+            session.index = index
+            wave.append(session)
+        self.stats.admitted += len(wave)
+        return wave
+
+    def _gate_wave(self, wave: List[AgentSession]):
+        """One batched gate call per admission wave (chunked to
+        ``gate_batch``), in task order — so a stateful classifier (the
+        scripted one draws from one rng stream) sees the exact same
+        call sequence as the sequential harness."""
+        if self.agent.gate is None or not wave:
+            return
+        cb = self.config.gate_batch
+        for lo in range(0, len(wave), cb):
+            chunk = wave[lo:lo + cb]
+            decisions = self.agent.gate.batch(
+                [s.task.query for s in chunk],
+                [s.ledger for s in chunk])
+            self.stats.gate_batches += 1
+            self.stats.gate_batch_sizes.append(len(chunk))
+            for session, (intent, libs) in zip(chunk, decisions):
+                self.agent.apply_gate_result(session, intent, libs)
+
+    def _mirror_to_engine(self, session: AgentSession):
+        """Serve the session's first planner turn on the engine. All
+        sessions gated to the same intent share one cached prefix
+        prefill (the gated system prompt + catalog)."""
+        if self.engine is None or not self.config.engine_turns:
+            return
+        key = f"planner:{session.intent or 'full-catalog'}"
+        prefix_text = session.planner.serialize_prompt_prefix(
+            session.catalog)
+        if key not in self.engine.prefixes:
+            self.engine.register_prefix(key, prefix_text)
+        es = self.engine.open_session(prefix_key=key)
+        es.submit_turn(f"{prefix_text}\nTask: {session.task.query}",
+                       max_new_tokens=self.config.engine_max_new_tokens,
+                       sampler=SamplerConfig(temperature=0.0))
+        self._engine_sessions.append(es)
+        self.stats.engine_turns += 1
+
+    # ------------------------------------------------------------- run ----
+    def run(self, tasks: Sequence[Task]) -> List[TaskResult]:
+        """Run every task to completion; TaskResults in task order."""
+        queue = deque(enumerate(tasks))
+        active: List[AgentSession] = []
+        results: List[Optional[TaskResult]] = [None] * len(tasks)
+        finished_turns = []
+        while queue or active:
+            wave = self._admit(queue, active)
+            self._gate_wave(wave)
+            for session in wave:
+                self._mirror_to_engine(session)
+            active.extend(wave)
+            self.stats.peak_concurrent = max(self.stats.peak_concurrent,
+                                             len(active))
+            self.stats.ticks += 1
+            if self.engine is not None:
+                # overlap engine decode with agent ticks
+                finished_turns.extend(self.engine.step())
+            still: List[AgentSession] = []
+            for session in active:
+                if self.agent.step_session(session):
+                    results[session.index] = session.result()
+                else:
+                    still.append(session)
+            active = still
+        if self.engine is not None:
+            finished_turns.extend(self.engine.run_until_done())
+            for es in self._engine_sessions:
+                es.collect(finished_turns)
+        return [r for r in results if r is not None]
+
+
+def run_pipeline(agent: Agent, tasks: Sequence[Task],
+                 max_concurrent: int = 16, engine=None,
+                 config: Optional[PipelineConfig] = None
+                 ) -> List[TaskResult]:
+    cfg = config or PipelineConfig(max_concurrent=max_concurrent)
+    return GeckOptPipeline(agent, cfg, engine=engine).run(tasks)
+
+
+def evaluate_pipeline(agent: Agent, tasks: Sequence[Task],
+                      name: str = "run", max_concurrent: int = 16,
+                      engine=None) -> EvalReport:
+    """Drop-in concurrent replacement for env.evaluator.evaluate —
+    same metrics, N sessions in flight."""
+    return evaluate_results(
+        run_pipeline(agent, tasks, max_concurrent, engine=engine), name)

@@ -1,0 +1,293 @@
+"""Concurrent serving pipeline: batched gate ≡ sequential gate,
+pipeline harness ≡ sequential harness, engine prefix-cache correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.accounting import TokenLedger
+from repro.core.agent import Agent
+from repro.core.gate import IntentGate, ScriptedIntentClassifier
+from repro.core.intents import INTENTS, build_intent_map
+from repro.core.planner import PlannerConfig, ScriptedPlanner
+from repro.core.tools import DEFAULT_REGISTRY
+from repro.env.evaluator import evaluate
+from repro.env.tasks import make_benchmark
+from repro.env.world import build_world
+from repro.models.model import init_params, prefill, prefill_extend
+from repro.serving.engine import InferenceEngine
+from repro.serving.neural_planner import (BatchedNeuralIntentClassifier,
+                                          NeuralIntentClassifier)
+from repro.serving.pipeline import (GeckOptPipeline, PipelineConfig,
+                                    evaluate_pipeline)
+from repro.serving.sampling import SamplerConfig
+from repro.serving.tokenizer import TOKENIZER
+
+
+@pytest.fixture(scope="module")
+def planner():
+    cfg = get_smoke_config("planner-proxy-100m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def world():
+    return build_world(0)
+
+
+@pytest.fixture(scope="module")
+def tasks(world):
+    return make_benchmark(world, 32)
+
+
+@pytest.fixture(scope="module")
+def intent_map(tasks):
+    return build_intent_map(tasks, DEFAULT_REGISTRY)
+
+
+# ------------------------------------------------- batched gate scoring ----
+
+def test_batched_classifier_matches_sequential(planner, tasks):
+    """One (Q*8, L) forward pass must make the SAME intent decisions as
+    the Q*8 sequential B=1 calls on the same params."""
+    cfg, params = planner
+    queries = [t.query for t in tasks[:10]]
+    seq = NeuralIntentClassifier(cfg, params)
+    bat = BatchedNeuralIntentClassifier(cfg, params)
+    a = [seq.classify(q) for q in queries]
+    b = bat.classify_batch(queries)
+    assert a == b
+    # odd wave sizes go through the pad path; decisions must not change
+    assert bat.classify_batch(queries[:3]) == a[:3]
+    assert bat.classify(queries[0]) == a[0]
+
+
+def test_batched_classifier_loss_matrix_shape(planner, tasks):
+    cfg, params = planner
+    bat = BatchedNeuralIntentClassifier(cfg, params)
+    losses = bat.losses([t.query for t in tasks[:3]])
+    assert losses.shape == (3, len(INTENTS))
+    assert np.isfinite(losses).all()
+
+
+def test_gate_batch_matches_sequential_calls(intent_map):
+    """IntentGate.batch must reproduce the sequential rng stream and the
+    sequential per-query ledger charges."""
+    queries = [f"plot images of region {i}" for i in range(9)]
+    libs = DEFAULT_REGISTRY.libraries()
+    g1 = IntentGate(intent_map, ScriptedIntentClassifier(
+        0.7, np.random.default_rng(3)), libs)
+    g2 = IntentGate(intent_map, ScriptedIntentClassifier(
+        0.7, np.random.default_rng(3)), libs)
+    led1 = [TokenLedger() for _ in queries]
+    led2 = [TokenLedger() for _ in queries]
+    seq = [g1(q, l) for q, l in zip(queries, led1)]
+    bat = g2.batch(queries, led2)
+    assert seq == bat
+    for a, b in zip(led1, led2):
+        assert [(e.kind, e.prompt_tokens, e.completion_tokens)
+                for e in a.entries] == \
+               [(e.kind, e.prompt_tokens, e.completion_tokens)
+                for e in b.entries]
+
+
+# --------------------------------------------- pipeline ≡ sequential -------
+
+@pytest.mark.parametrize("gated", [True, False])
+def test_pipeline_metrics_identical_to_sequential(world, tasks,
+                                                  intent_map, gated):
+    """N concurrent sessions must produce the same Table-2 metrics as
+    the sequential harness at the same seed: per-session state is
+    isolated and admission keeps the classifier's rng stream in task
+    order."""
+    cfg = PlannerConfig(mode="react", few_shot=False)
+    libs = DEFAULT_REGISTRY.libraries()
+
+    def agent():
+        gate = IntentGate(intent_map, ScriptedIntentClassifier(
+            0.97, np.random.default_rng(0)), libs) if gated else None
+        return Agent(DEFAULT_REGISTRY, world, cfg, gate=gate, seed=0)
+
+    seq = evaluate(agent(), tasks, "seq")
+    par = evaluate_pipeline(agent(), tasks, "par", max_concurrent=7)
+    assert seq.row() == par.row()
+    assert seq.tokens_per_task == par.tokens_per_task
+    assert seq.gate_tokens == par.gate_tokens
+
+
+def test_pipeline_respects_concurrency_cap(world, tasks, intent_map):
+    cfg = PlannerConfig(mode="cot", few_shot=False)
+    gate = IntentGate(intent_map, ScriptedIntentClassifier(
+        0.97, np.random.default_rng(0)), DEFAULT_REGISTRY.libraries())
+    pipe = GeckOptPipeline(Agent(DEFAULT_REGISTRY, world, cfg, gate=gate,
+                                 seed=0),
+                           PipelineConfig(max_concurrent=5))
+    results = pipe.run(tasks)
+    assert len(results) == len(tasks)
+    assert pipe.stats.peak_concurrent <= 5
+    assert pipe.stats.admitted == len(tasks)
+    # every admission wave was gated in one batched call
+    assert sum(pipe.stats.gate_batch_sizes) == len(tasks)
+
+
+def test_run_task_unchanged_by_session_refactor(world, tasks):
+    """run_task (start/step/finish composed) still matches a hand-rolled
+    session drive."""
+    cfg = PlannerConfig(mode="react", few_shot=True)
+    a1 = Agent(DEFAULT_REGISTRY, world, cfg, gate=None, seed=0)
+    r1 = a1.run_task(tasks[0], task_seed=0)
+    s = a1.start_session(tasks[0], task_seed=0)
+    while not a1.step_session(s):
+        pass
+    r2 = s.result()
+    assert r1.ledger.total_tokens == r2.ledger.total_tokens
+    assert r1.steps == r2.steps
+    assert r1.executed_tools == r2.executed_tools
+    assert r1.completed_plan == r2.completed_plan
+
+
+# ------------------------------------------------- engine prefix cache ----
+
+def test_engine_prefix_cache_outputs_identical(planner):
+    """Requests served off a cached prefix prefill must emit exactly the
+    greedy tokens of a full per-request prefill."""
+    cfg, params = planner
+    prefix = ("You are the intent router of a geospatial Copilot "
+              "platform. Classify the user query into exactly one "
+              "intent and reply with the intent name only.")
+    queries = ["plot sentinel2 images around Tampa Bay",
+               "how many ships are docked near Singapore",
+               "transcribe the meeting recording"]
+
+    def serve(use_prefix):
+        eng = InferenceEngine(cfg, params, max_batch=2, cache_len=256,
+                              seed=0)
+        if use_prefix:
+            eng.register_prefix("gate", prefix)
+        rids = [eng.add_request(f"{prefix} Query: {q}", max_new_tokens=4,
+                                sampler=SamplerConfig(temperature=0.0),
+                                prefix_key="gate" if use_prefix else None)
+                for q in queries]
+        done = {r.request_id: r.output for r in eng.run_until_done()}
+        return [done[r] for r in rids], eng.throughput_stats()
+
+    base, _ = serve(False)
+    cached, stats = serve(True)
+    assert base == cached
+    assert stats["prefix_hits"] == len(queries)
+    assert stats["prefix_tokens_saved"] > 0
+    # only the one prefix prefill ran; every request rode the cache
+    assert stats["prefills"] == 1
+
+
+def test_engine_prefix_near_cache_end(planner):
+    """Bucket padding must not write past cache_len: a suffix whose
+    power-of-two pad would overflow the cache (dynamic_update_slice
+    clamps the start and would corrupt prefix rows) is capped to the
+    remaining room."""
+    cfg, params = planner
+    prefix_text = " ".join(["alpha beta gamma delta"] * 10)
+    suffix_text = " " + " ".join(["query word"] * 10)
+
+    def run(use_prefix):
+        eng = InferenceEngine(cfg, params, max_batch=2, cache_len=64,
+                              seed=0)
+        if use_prefix:
+            eng.register_prefix("p", prefix_text)
+        eng.add_request(prefix_text + suffix_text, max_new_tokens=2,
+                        sampler=SamplerConfig(temperature=0.0),
+                        prefix_key="p" if use_prefix else None)
+        return [r.output for r in eng.run_until_done()]
+
+    assert run(False) == run(True)
+
+
+def test_engine_prefix_miss_falls_back(planner):
+    """A request whose prompt does not start with the registered prefix
+    must be prefilled in full, not silently mis-served."""
+    cfg, params = planner
+    eng = InferenceEngine(cfg, params, max_batch=2, cache_len=256)
+    eng.register_prefix("gate", "the registered system prefix")
+    eng.add_request("a completely different prompt", max_new_tokens=2,
+                    sampler=SamplerConfig(temperature=0.0),
+                    prefix_key="gate")
+    done = eng.run_until_done()
+    assert len(done) == 1
+    assert eng.throughput_stats()["prefix_hits"] == 0
+
+
+def test_prefill_extend_matches_full_prefill(planner):
+    """Chunked prefill: prefix prefill + multi-token extend must agree
+    with one full prefill (greedy next token)."""
+    cfg, params = planner
+    ids = TOKENIZER.encode_with_specials(
+        "classify intent: plot sentinel2 images around Tampa Bay => ")
+    cut = len(ids) // 2
+    full_logits, _ = prefill(params, cfg,
+                             {"tokens": jnp.asarray(ids, jnp.int32)[None]},
+                             cache_len=128)
+    head_logits, cache = prefill(
+        params, cfg, {"tokens": jnp.asarray(ids[:cut], jnp.int32)[None]},
+        cache_len=128)
+    cache = dict(cache)
+    cache["pos"] = jnp.asarray(cut, jnp.int32)
+    ext_logits, cache = prefill_extend(
+        params, cfg, cache,
+        {"tokens": jnp.asarray(ids[cut:], jnp.int32)[None]})
+    assert int(cache["pos"]) == len(ids)
+    assert int(jnp.argmax(full_logits[0])) == int(jnp.argmax(ext_logits[0]))
+
+
+def test_prefill_extend_pad_bucket_equivalent(planner):
+    """Bucket-padded extend (n_valid < S) must give the same logits
+    position and cache pos as the exact-length call."""
+    cfg, params = planner
+    ids = TOKENIZER.encode_with_specials("plot images of Rotterdam")
+    cut = 3
+
+    def extended(pad):
+        _, cache = prefill(
+            params, cfg,
+            {"tokens": jnp.asarray(ids[:cut], jnp.int32)[None]},
+            cache_len=64)
+        cache = dict(cache)
+        cache["pos"] = jnp.asarray(cut, jnp.int32)
+        tail = ids[cut:] + [0] * pad
+        logits, cache = prefill_extend(
+            params, cfg, cache,
+            {"tokens": jnp.asarray(tail, jnp.int32)[None]},
+            n_valid=len(ids) - cut)
+        return logits, int(cache["pos"])
+
+    exact, pos_a = extended(0)
+    padded, pos_b = extended(5)
+    assert pos_a == pos_b == len(ids)
+    assert int(jnp.argmax(exact[0])) == int(jnp.argmax(padded[0]))
+
+
+# --------------------------------------------------- engine mirroring ----
+
+def test_pipeline_engine_mirroring(planner, world, intent_map):
+    """With an engine attached, each gated session's first planner turn
+    is served off a shared per-intent prefix."""
+    cfg, params = planner
+    engine = InferenceEngine(cfg, params, max_batch=2, cache_len=4096)
+    tasks = make_benchmark(world, 4)
+    gate = IntentGate(intent_map, ScriptedIntentClassifier(
+        1.0, np.random.default_rng(0)), DEFAULT_REGISTRY.libraries())
+    agent = Agent(DEFAULT_REGISTRY, world,
+                  PlannerConfig(mode="cot", few_shot=False), gate=gate,
+                  seed=0)
+    pipe = GeckOptPipeline(agent, PipelineConfig(max_concurrent=4,
+                                                 engine_max_new_tokens=2),
+                           engine=engine)
+    results = pipe.run(tasks)
+    assert len(results) == 4
+    stats = engine.throughput_stats()
+    assert pipe.stats.engine_turns == 4
+    assert stats["prefix_hits"] == 4          # every turn rode a prefix
+    assert len(engine.prefixes) <= 4          # intents shared prefixes
+    assert all(es.idle for es in pipe._engine_sessions)
+    assert all(len(es.turns) == 1 for es in pipe._engine_sessions)

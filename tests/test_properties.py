@@ -5,6 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev dependency; see "
+                                         "requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.env.evaluator import rouge_l

@@ -6,6 +6,9 @@ results/dryrun)."""
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev dependency; see "
+                                         "requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
