@@ -41,6 +41,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--concurrency", type=int, default=8)
+    ap.add_argument("--backend", default=None,
+                    choices=("reference", "pallas"),
+                    help="kernel backend for the engine's jitted steps")
     args = ap.parse_args()
 
     # --- the serving fleet: one engine + one batched gate model ----------
@@ -48,7 +51,8 @@ def main():
     params = init_params(jax.random.PRNGKey(0), cfg)
     # cache_len must hold the longest per-intent planner prefix (~2.5k
     # tokens of system prompt + catalog) plus the turn suffix
-    engine = InferenceEngine(cfg, params, max_batch=4, cache_len=4096)
+    engine = InferenceEngine(cfg, params, max_batch=4, cache_len=4096,
+                             backend=args.backend)
     classifier = BatchedNeuralIntentClassifier(cfg, params)
     print(f"planner engine up: {count_params_analytic(cfg)/1e6:.1f}M "
           f"params, 4 slots; batched intent gate ready")

@@ -43,6 +43,11 @@ class PerfFlags:
     # instead of masking full-length logits ("off"|"on") — cuts logits
     # traffic by Sk/(window+chunk) on local-attention layers
     attn_window_slice: str = "off"
+    # kernel backend for attention / MoE router / SSM & mLSTM scans:
+    # "reference" (pure-jnp, GSPMD-partitionable) | "pallas" (hand-tiled
+    # TPU kernels; interpret-mode on CPU). Per-call backend= args and
+    # kernels.backend.use_backend() override this global default.
+    kernel_backend: str = "reference"
 
     def apply_overrides(self, spec: str) -> "PerfFlags":
         """'ssm_scan_chunk=128,moe_dispatch=gather' -> new flags."""

@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels for the serving hot paths (flash prefill/decode
+# attention, fused MoE router top-k, selective-SSM scan, mLSTM scan),
+# their pure-jnp oracles (ref.py), and the pluggable backend registry
+# (backend.py) the model stack dispatches through — see DESIGN.md
+# §Kernel backends.

@@ -1,0 +1,166 @@
+"""Pluggable attention/op kernel backend registry.
+
+Every compute hot-spot in the model stack (attention prefill/extend,
+cache decode, MoE router top-k, selective-SSM scan, mLSTM recurrence)
+dispatches through a named :class:`KernelBackend`:
+
+  * ``reference`` — the pure-jnp paths (layers.attention's chunked
+    GSPMD-friendly attention, lax.top_k routing, associative-scan SSM,
+    chunkwise mLSTM). Always available, partitionable under pjit.
+  * ``pallas``    — the hand-tiled Pallas TPU kernels in this package.
+    On CPU they run under ``interpret=True`` (bit-accurate, slow), so
+    the same selection is testable everywhere.
+
+Selection, in precedence order:
+
+  1. per-call  — ``backend="pallas"`` threaded through the model API
+     (engine/prefill/decode_step/... all take it);
+  2. scoped    — ``with use_backend("pallas"): ...``;
+  3. global    — ``PerfFlags.kernel_backend`` (the ``--perf`` CLI knob).
+
+Model-level call sites treat any backend other than ``reference`` as "use
+the backend's kernels when the op is expressible" and keep the jnp path
+for the rest (e.g. under an active device mesh, where GSPMD owns
+partitioning — Pallas kernels are chip-local).
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Union
+
+import jax
+
+from repro.kernels import ref as R
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.mlstm_scan import mlstm_scan
+from repro.kernels.moe_router import moe_router_topk
+from repro.kernels.ssm_scan import ssm_scan
+
+
+@dataclass(frozen=True)
+class KernelBackend:
+    """One implementation of the kernel op vocabulary.
+
+    All ops share the reference signatures (see kernels/ref.py):
+      attention(q, k, v, *, causal, window, cap, scale, q_offset)
+      decode_attention(q, k_cache, v_cache, kv_len, *, cap, scale)
+      router_topk(logits (T,E), k) -> (weights (T,k) fp32, idx (T,k) i32)
+      selective_scan(dt, x, B_, C_, A, h0) -> (y, h_last)
+      mlstm_scan(q, k, v, i_pre, f_pre, state, *, scale) -> (h, state)
+    """
+    name: str
+    attention: Callable
+    decode_attention: Callable
+    router_topk: Callable
+    selective_scan: Callable
+    mlstm_scan: Callable
+
+
+_REGISTRY: Dict[str, KernelBackend] = {}
+_SCOPED: Optional[str] = None
+
+
+def register_backend(backend: KernelBackend) -> KernelBackend:
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def available_backends():
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(spec: Union[None, str, KernelBackend] = None
+                ) -> KernelBackend:
+    """Resolve a backend: explicit arg > use_backend scope > PerfFlags."""
+    if isinstance(spec, KernelBackend):
+        return spec
+    name = spec or _SCOPED
+    if name is None:
+        from repro.common.perf import get_flags
+        name = get_flags().kernel_backend
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel backend {name!r}; have {available_backends()}")
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scope the default backend (per-call args still win)."""
+    global _SCOPED
+    get_backend(name)          # validate eagerly
+    prev = _SCOPED
+    _SCOPED = name
+    try:
+        yield
+    finally:
+        _SCOPED = prev
+
+
+def mesh_local() -> bool:
+    """True when no device mesh is active — i.e. the Pallas (chip-local)
+    kernels may replace the GSPMD-partitionable jnp paths."""
+    from repro.distributed.annotate import _mesh
+    return _mesh() is None
+
+
+# ----------------------------------------------------------- reference ----
+
+def _ref_router_topk(logits, k: int):
+    w, i, _ = R.router_topk_ref(logits, k)
+    return w, i
+
+
+register_backend(KernelBackend(
+    name="reference",
+    attention=R.attention_ref,
+    decode_attention=R.decode_attention_ref,
+    router_topk=_ref_router_topk,
+    selective_scan=R.selective_scan_ref,
+    mlstm_scan=R.mlstm_scan_ref,
+))
+
+
+# -------------------------------------------------------------- pallas ----
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pl_attention(q, k, v, *, causal=True, window=0, cap=0.0, scale=0.0,
+                  q_offset=0):
+    return flash_prefill(q, k, v, causal=causal, window=window, cap=cap,
+                         scale=scale, q_offset=q_offset,
+                         interpret=_interpret())
+
+
+def _pl_decode_attention(q, k_cache, v_cache, kv_len, *, cap=0.0,
+                         scale=0.0):
+    return flash_decode(q, k_cache, v_cache, kv_len, cap=cap, scale=scale,
+                        interpret=_interpret())
+
+
+def _pl_router_topk(logits, k: int):
+    return moe_router_topk(logits, k, interpret=_interpret())
+
+
+def _pl_selective_scan(dt, x, B_, C_, A, h0=None):
+    return ssm_scan(dt, x, B_, C_, A, h0, interpret=_interpret())
+
+
+def _pl_mlstm_scan(q, k, v, i_pre, f_pre, state=None, *, scale=0.0):
+    return mlstm_scan(q, k, v, i_pre, f_pre, state, scale=scale,
+                      interpret=_interpret())
+
+
+register_backend(KernelBackend(
+    name="pallas",
+    attention=_pl_attention,
+    decode_attention=_pl_decode_attention,
+    router_topk=_pl_router_topk,
+    selective_scan=_pl_selective_scan,
+    mlstm_scan=_pl_mlstm_scan,
+))

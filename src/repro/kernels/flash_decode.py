@@ -9,6 +9,8 @@ Single new token attending to a long KV cache:
 
 ``kv_len`` (valid cache entries) arrives via scalar prefetch (SMEM) so the
 same compiled kernel serves any fill level; blocks past kv_len are masked.
+A scalar kv_len serves a synchronized batch; a (B,) vector serves
+continuous batching, where every slot sits at its own fill level.
 """
 from __future__ import annotations
 
@@ -25,8 +27,9 @@ NEG_INF = -1e30
 
 def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             cap: float, scale: float, block_k: int, nk: int):
+    b = pl.program_id(0)
     ki = pl.program_id(2)
-    kv_len = kvlen_ref[0]
+    kv_len = kvlen_ref[b]
 
     @pl.when(ki == 0)
     def _init():
@@ -62,7 +65,7 @@ def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_decode(q, k_cache, v_cache, kv_len, *, cap: float = 0.0,
                  scale: float = 0.0, block_k: int = 512,
                  interpret: bool = True):
-    """q: (B,Hq,hd); caches: (B,Hkv,Sk,hd); kv_len: scalar int32.
+    """q: (B,Hq,hd); caches: (B,Hkv,Sk,hd); kv_len: scalar or (B,) int32.
 
     Returns (B,Hq,hd)."""
     B, Hq, hd = q.shape
@@ -76,7 +79,8 @@ def flash_decode(q, k_cache, v_cache, kv_len, *, cap: float = 0.0,
     nk = Sk // block_k
 
     qf = q.reshape(B, Hkv, G, hd)
-    kv_len = jnp.asarray(kv_len, jnp.int32).reshape((1,))
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1),
+                              (B,))
 
     kernel = functools.partial(_kernel, cap=cap, scale=scale,
                                block_k=block_k, nk=nk)
@@ -103,7 +107,7 @@ def flash_decode(q, k_cache, v_cache, kv_len, *, cap: float = 0.0,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(kv_len, qf, k_cache, v_cache)

@@ -13,6 +13,11 @@ with the (block_q, block_k) score tile + accumulators well inside the
 
 GQA: the kv head index is derived from the q head index in the BlockSpec
 index maps (hq // group).
+
+``q_offset`` (the absolute position of q[0], for chunked-prefill extend
+against a pre-filled cache) arrives via scalar prefetch (SMEM) so one
+compiled kernel serves any continuation point; cache rows at or beyond
+q_offset + Sq are masked by the causal term.
 """
 from __future__ import annotations
 
@@ -27,11 +32,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+def _kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             causal: bool, window: int, cap: float, scale: float,
             block_q: int, block_k: int, nk: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
+    q_off = qoff_ref[0]
 
     @pl.when(ki == 0)
     def _init():
@@ -47,8 +53,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     if cap:
         s = cap * jnp.tanh(s / cap)
 
-    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
-                                                   (block_q, block_k), 0)
+    qpos = q_off + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
     kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
                                                    (block_q, block_k), 1)
     mask = jnp.ones_like(s, dtype=jnp.bool_)
@@ -76,10 +82,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 def flash_prefill(q, k, v, *, causal: bool = True, window: int = 0,
-                  cap: float = 0.0, scale: float = 0.0,
+                  cap: float = 0.0, scale: float = 0.0, q_offset=0,
                   block_q: int = 128, block_k: int = 256,
                   interpret: bool = True):
-    """q: (B,Hq,Sq,hd); k,v: (B,Hkv,Sk,hd) -> (B,Hq,Sq,hd)."""
+    """q: (B,Hq,Sq,hd); k,v: (B,Hkv,Sk,hd) -> (B,Hq,Sq,hd).
+
+    q_offset: absolute position of q[0] (python int or traced scalar)."""
     B, Hq, Sq, hd = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
     G = Hq // Hkv
@@ -96,31 +104,37 @@ def flash_prefill(q, k, v, *, causal: bool = True, window: int = 0,
     qf = q.reshape(B * Hq, Sq, hd)
     kf = k.reshape(B * Hkv, Sk, hd)
     vf = v.reshape(B * Hkv, Sk, hd)
+    q_off = jnp.asarray(q_offset, jnp.int32).reshape((1,))
 
     kernel = functools.partial(
         _kernel, causal=causal, window=window, cap=cap, scale=scale,
         block_q=block_q, block_k=block_k, nk=nk)
 
-    out = pl.pallas_call(
-        kernel,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(B * Hq, nq, nk),
         in_specs=[
-            pl.BlockSpec((None, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((None, block_q, hd),
+                         lambda bh, qi, ki, qo: (bh, qi, 0)),
             pl.BlockSpec((None, block_k, hd),
-                         lambda bh, qi, ki, G=G: (bh // G, ki, 0)),
+                         lambda bh, qi, ki, qo, G=G: (bh // G, ki, 0)),
             pl.BlockSpec((None, block_k, hd),
-                         lambda bh, qi, ki, G=G: (bh // G, ki, 0)),
+                         lambda bh, qi, ki, qo, G=G: (bh // G, ki, 0)),
         ],
         out_specs=pl.BlockSpec((None, block_q, hd),
-                               lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, hd), q.dtype),
+                               lambda bh, qi, ki, qo: (bh, qi, 0)),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, hd), q.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(qf, kf, vf)
+    )(q_off, qf, kf, vf)
     return out.reshape(B, Hq, Sq, hd)

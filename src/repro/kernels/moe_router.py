@@ -49,6 +49,8 @@ def moe_router_topk(logits, k: int, *, block_t: int = 256,
     """logits: (T, E) -> (weights (T,k) fp32, idx (T,k) int32)."""
     T, E = logits.shape
     block_t = min(block_t, T)
+    while T % block_t:
+        block_t //= 2
     assert T % block_t == 0
     nt = T // block_t
 
@@ -61,7 +63,7 @@ def moe_router_topk(logits, k: int, *, block_t: int = 256,
                    pl.BlockSpec((block_t, k), lambda t: (t, 0))],
         out_shape=[jax.ShapeDtypeStruct((T, k), jnp.float32),
                    jax.ShapeDtypeStruct((T, k), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(logits)

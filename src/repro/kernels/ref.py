@@ -11,45 +11,51 @@ import jax
 import jax.numpy as jnp
 
 
-def attention_ref(q, k, v, *, causal=True, window=0, cap=0.0, kv_len=None):
+def attention_ref(q, k, v, *, causal=True, window=0, cap=0.0, kv_len=None,
+                  q_offset=0, scale=0.0):
     """q: (B,Hq,Sq,hd); k,v: (B,Hkv,Sk,hd); GQA by head repetition.
 
     window: sliding-window size (0 = full); cap: logit softcap;
-    kv_len: number of valid kv entries (decode against a partially filled
-    cache); q positions are assumed to end at kv_len-1 (decode) or to be
-    0..Sq-1 (prefill).
+    kv_len: number of valid kv entries — scalar or (B,) vector (decode
+    against per-sequence fill levels); q positions are assumed to end at
+    kv_len-1 (decode) or to start at q_offset (prefill / chunked-prefill
+    extend). scale: 0 -> 1/sqrt(hd).
     """
     B, Hq, Sq, hd = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
     G = Hq // Hkv
     k = jnp.repeat(k, G, axis=1)
     v = jnp.repeat(v, G, axis=1)
+    scale = scale if scale else 1.0 / math.sqrt(hd)
     logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
-                        k.astype(jnp.float32)) / math.sqrt(hd)
+                        k.astype(jnp.float32)) * scale
     if cap:
         logits = cap * jnp.tanh(logits / cap)
     kpos = jnp.arange(Sk)
     if kv_len is not None:
-        qpos = kv_len - Sq + jnp.arange(Sq)
-        valid = kpos[None, :] < kv_len
+        kvl = jnp.asarray(kv_len)
+        kvl = kvl[None] if kvl.ndim == 0 else kvl              # (1,)|(B,)
+        qpos = kvl[:, None] - Sq + jnp.arange(Sq)[None, :]     # (1|B,Sq)
+        valid = kpos[None, None, :] < kvl[:, None, None]       # (1|B,1,Sk)
     else:
-        qpos = jnp.arange(Sq)
-        valid = jnp.ones((1, Sk), bool)
-    mask = valid
+        qpos = q_offset + jnp.arange(Sq)[None, :]              # (1,Sq)
+        valid = jnp.ones((1, 1, Sk), bool)
+    mask = jnp.broadcast_to(valid, valid.shape[:1] + (Sq, Sk))
     if causal:
-        mask = mask & (kpos[None, :] <= qpos[:, None])
+        mask = mask & (kpos[None, None, :] <= qpos[..., None])
     if window:
-        mask = mask & (qpos[:, None] - kpos[None, :] < window)
-    logits = jnp.where(mask[None, None], logits, -1e30)
+        mask = mask & (qpos[..., None] - kpos[None, None, :] < window)
+    logits = jnp.where(mask[:, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", probs,
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
-def decode_attention_ref(q, k_cache, v_cache, kv_len, *, cap=0.0):
-    """q: (B,Hq,hd); caches: (B,Hkv,S,hd); kv_len: scalar int."""
+def decode_attention_ref(q, k_cache, v_cache, kv_len, *, cap=0.0,
+                         scale=0.0):
+    """q: (B,Hq,hd); caches: (B,Hkv,S,hd); kv_len: scalar or (B,) int."""
     out = attention_ref(q[:, :, None], k_cache, v_cache, causal=False,
-                        cap=cap, kv_len=kv_len)
+                        cap=cap, kv_len=kv_len, scale=scale)
     return out[:, :, 0]
 
 
@@ -61,11 +67,11 @@ def router_topk_ref(logits, k: int):
     return w, idx.astype(jnp.int32), probs
 
 
-def selective_scan_ref(dt, x, B_, C_, A):
+def selective_scan_ref(dt, x, B_, C_, A, h0=None):
     """Sequential selective-scan oracle.
 
-    dt, x: (B,S,di); B_, C_: (B,S,n); A: (di,n). Returns y (B,S,di) fp32
-    and final state h (B,di,n).
+    dt, x: (B,S,di); B_, C_: (B,S,n); A: (di,n); h0: optional initial
+    state (B,di,n). Returns y (B,S,di) fp32 and final state h (B,di,n).
     """
     Bsz, S, di = x.shape
     n = A.shape[-1]
@@ -77,22 +83,25 @@ def selective_scan_ref(dt, x, B_, C_, A):
         y = jnp.einsum("bdn,bn->bd", h, C_t)
         return h, y
 
-    h0 = jnp.zeros((Bsz, di, n), jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, di, n), jnp.float32)
     xs = (dt.swapaxes(0, 1).astype(jnp.float32),
           x.swapaxes(0, 1).astype(jnp.float32),
           B_.swapaxes(0, 1).astype(jnp.float32),
           C_.swapaxes(0, 1).astype(jnp.float32))
-    h, ys = jax.lax.scan(step, h0, xs)
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
     return ys.swapaxes(0, 1), h
 
 
-def mlstm_ref(q, k, v, i_pre, f_pre):
-    """Sequential stabilized mLSTM oracle.
+def mlstm_scan_ref(q, k, v, i_pre, f_pre, state=None, *, scale=0.0):
+    """Sequential stabilized mLSTM oracle with state carry.
 
-    q,k,v: (B,H,S,hd) fp32; i_pre,f_pre: (B,H,S). Returns h (B,H,S,hd).
+    q,k,v: (B,H,S,hd) fp32; i_pre,f_pre: (B,H,S); state: optional
+    (C (B,H,hd,hd), n (B,H,hd), m (B,H)). Returns (h (B,H,S,hd),
+    new_state).
     """
     B, H, S, hd = q.shape
-    scale = 1.0 / math.sqrt(hd)
+    scale = scale if scale else 1.0 / math.sqrt(hd)
 
     def step(carry, t):
         C, n, m = carry
@@ -111,10 +120,19 @@ def mlstm_ref(q, k, v, i_pre, f_pre):
         h = num / den[..., None]
         return (C, n, m_new), h
 
-    carry = (jnp.zeros((B, H, hd, hd), jnp.float32),
-             jnp.zeros((B, H, hd), jnp.float32),
-             jnp.full((B, H), -1e30, jnp.float32))
+    if state is None:
+        state = (jnp.zeros((B, H, hd, hd), jnp.float32),
+                 jnp.zeros((B, H, hd), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
     sw = lambda t: jnp.moveaxis(t, 2, 0)
-    _, hs = jax.lax.scan(step, carry, (sw(q), sw(k), sw(v),
-                                       sw(i_pre), sw(f_pre)))
-    return jnp.moveaxis(hs, 0, 2)
+    state, hs = jax.lax.scan(step, state, (sw(q), sw(k), sw(v),
+                                           sw(i_pre), sw(f_pre)))
+    return jnp.moveaxis(hs, 0, 2), state
+
+
+def mlstm_ref(q, k, v, i_pre, f_pre):
+    """Sequential stabilized mLSTM oracle (fresh state, outputs only).
+
+    q,k,v: (B,H,S,hd) fp32; i_pre,f_pre: (B,H,S). Returns h (B,H,S,hd).
+    """
+    return mlstm_scan_ref(q, k, v, i_pre, f_pre)[0]

@@ -7,6 +7,10 @@ sequential fori_loop over the block_s timesteps inside the kernel (the
 (block_d, n) update is a VPU-wide elementwise op; n=16 keeps the state
 tile tiny, so the kernel is bandwidth-bound on dt/x streaming, which is
 the roofline-optimal regime for SSMs).
+
+The scan starts from an explicit initial state ``h0`` and returns the
+final state alongside the outputs, so serving can continue a sequence
+(decode / chunked-prefill extend) through the same kernel.
 """
 from __future__ import annotations
 
@@ -18,13 +22,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, h_scr, *,
-            block_s: int):
+def _kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, hf_ref,
+            h_scr, *, block_s: int, ns: int):
     si = pl.program_id(2)
 
     @pl.when(si == 0)
     def _init():
-        h_scr[...] = jnp.zeros_like(h_scr)
+        h_scr[...] = h0_ref[...]
 
     A = a_ref[...]                                      # (bd, n)
 
@@ -40,19 +44,30 @@ def _kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, h_scr, *,
 
     h_scr[...] = jax.lax.fori_loop(0, block_s, step, h_scr[...])
 
+    @pl.when(si == ns - 1)
+    def _finalize():
+        hf_ref[...] = h_scr[...]
 
-def ssm_scan(dt, x, B_, C_, A, *, block_d: int = 256, block_s: int = 256,
-             interpret: bool = True):
-    """dt, x: (B,S,di); B_, C_: (B,S,n); A: (di,n) -> y (B,S,di) fp32."""
+
+def ssm_scan(dt, x, B_, C_, A, h0=None, *, block_d: int = 256,
+             block_s: int = 256, interpret: bool = True):
+    """dt, x: (B,S,di); B_, C_: (B,S,n); A: (di,n); h0: optional initial
+    state (B,di,n). Returns (y (B,S,di) fp32, h_last (B,di,n) fp32)."""
     Bsz, S, di = x.shape
     n = A.shape[-1]
     block_d = min(block_d, di)
     block_s = min(block_s, S)
+    while di % block_d:
+        block_d //= 2
+    while S % block_s:
+        block_s //= 2
     assert di % block_d == 0 and S % block_s == 0
     nd, ns = di // block_d, S // block_s
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, di, n), jnp.float32)
 
-    kernel = functools.partial(_kernel, block_s=block_s)
-    y = pl.pallas_call(
+    kernel = functools.partial(_kernel, block_s=block_s, ns=ns)
+    y, h_last = pl.pallas_call(
         kernel,
         grid=(Bsz, nd, ns),
         in_specs=[
@@ -63,13 +78,18 @@ def ssm_scan(dt, x, B_, C_, A, *, block_d: int = 256, block_s: int = 256,
             pl.BlockSpec((None, block_s, n), lambda b, d, s: (b, s, 0)),
             pl.BlockSpec((None, block_s, n), lambda b, d, s: (b, s, 0)),
             pl.BlockSpec((block_d, n), lambda b, d, s: (d, 0)),
+            pl.BlockSpec((None, block_d, n), lambda b, d, s: (b, d, 0)),
         ],
-        out_specs=pl.BlockSpec((None, block_s, block_d),
-                               lambda b, d, s: (b, s, d)),
-        out_shape=jax.ShapeDtypeStruct((Bsz, S, di), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((None, block_s, block_d),
+                         lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((None, block_d, n), lambda b, d, s: (b, d, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((Bsz, S, di), jnp.float32),
+                   jax.ShapeDtypeStruct((Bsz, di, n), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(dt, x, B_, C_, A.astype(jnp.float32))
-    return y
+    )(dt, x, B_, C_, A.astype(jnp.float32), h0.astype(jnp.float32))
+    return y, h_last

@@ -121,9 +121,15 @@ def computation_multipliers(text: str) -> Tuple[Dict[str, List[str]],
                         continue
                     factor = 1.0
                     if kind == "body":
-                        cm = re.search(r"condition=%?([\w\.\-]+)", ln)
-                        trips = _trip_count(comps.get(cm.group(1), [])) if cm \
-                            else 1
+                        # XLA annotates scan-derived while loops directly
+                        kt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}',
+                                       ln)
+                        if kt:
+                            trips = int(kt.group(1))
+                        else:
+                            cm = re.search(r"condition=%?([\w\.\-]+)", ln)
+                            trips = _trip_count(comps.get(cm.group(1), [])) \
+                                if cm else 1
                         factor = float(trips)
                     new = m_here * factor
                     if new > mult.get(callee, 0.0):
@@ -159,8 +165,13 @@ def _operands(line: str) -> List[str]:
     m = re.search(r"\w+\(([^)]*)\)", line.split("=", 1)[-1])
     if not m:
         return []
-    return [t.strip().lstrip("%") for t in m.group(1).split(",")
-            if t.strip().startswith("%") or re.match(r"^\w", t.strip())]
+    text = m.group(1)
+    if "%" in text:
+        # operand names are %-prefixed; robust to inline operand shapes
+        # ('dot(f32[128,256]{1,0} %lhs, ...)' — the shape commas break a
+        # naive comma split) in newer XLA text
+        return re.findall(r"%([\w\.\-]+)", text)
+    return [t.strip() for t in text.split(",") if re.match(r"^\w", t.strip())]
 
 
 def _shape_table(lines: List[str]) -> Dict[str, str]:

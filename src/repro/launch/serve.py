@@ -27,6 +27,9 @@ def main():
     ap.add_argument("--cache-len", type=int, default=512)
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--backend", default=None,
+                    choices=("reference", "pallas"),
+                    help="kernel backend (default: PerfFlags.kernel_backend)")
     args = ap.parse_args()
 
     cfg = (get_smoke_config(args.arch) if args.smoke
@@ -36,7 +39,8 @@ def main():
         params = load_checkpoint(args.checkpoint, params)
 
     engine = InferenceEngine(cfg, params, max_batch=args.max_batch,
-                             cache_len=args.cache_len)
+                             cache_len=args.cache_len,
+                             backend=args.backend)
     prompts = [
         f"Plot xview1 images around Tampa Bay with cloud cover below "
         f"{10 + i}%" for i in range(args.requests)]

@@ -97,7 +97,7 @@ def _ring_from_prefill(k, W: int, Sc: int):
 # ------------------------------------------------------------------ apply ----
 
 def _attn_sublayer(p, x, cfg, kind, mode, cache, pos, positions, cross=False,
-                   memory=None):
+                   memory=None, backend=None):
     """Shared attention sub-layer. Returns (y, new_cache_kv)."""
     window = cfg.window if (kind in WINDOW_KINDS and not cross) else 0
     causal = (kind != "enc") and not cross
@@ -116,7 +116,7 @@ def _attn_sublayer(p, x, cfg, kind, mode, cache, pos, positions, cross=False,
             q = q + ap["bq"]
         q = q.reshape(B, Sq, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
         out = L.attention(q, k, v, causal=False, cap=cfg.attn_softcap,
-                          scale=cfg.attn_scale)
+                          scale=cfg.attn_scale, backend=backend)
         return L.out_proj(ap, out), new_kv
 
     q, k, v = L.qkv_proj(ap, x, cfg)
@@ -131,12 +131,14 @@ def _attn_sublayer(p, x, cfg, kind, mode, cache, pos, positions, cross=False,
 
     if mode == "train":
         out = L.attention(q, k, v, causal=causal, window=window,
-                          cap=cfg.attn_softcap, scale=cfg.attn_scale)
+                          cap=cfg.attn_softcap, scale=cfg.attn_scale,
+                          backend=backend)
         return L.out_proj(ap, out), {}
 
     if mode == "prefill":
         out = L.attention(q, k, v, causal=causal, window=window,
-                          cap=cfg.attn_softcap, scale=cfg.attn_scale)
+                          cap=cfg.attn_softcap, scale=cfg.attn_scale,
+                          backend=backend)
         Sc = cache["k"].shape[2]
         if window:
             nk = _ring_from_prefill(k.astype(jnp.bfloat16), window, Sc)
@@ -162,7 +164,8 @@ def _attn_sublayer(p, x, cfg, kind, mode, cache, pos, positions, cross=False,
         nv = jax.lax.dynamic_update_slice(
             cache["v"], v.astype(jnp.bfloat16), (0, 0, pos, 0))
         out = L.attention(q, nk, nv, causal=True, q_offset=pos,
-                          cap=cfg.attn_softcap, scale=cfg.attn_scale)
+                          cap=cfg.attn_softcap, scale=cfg.attn_scale,
+                          backend=backend)
         return L.out_proj(ap, out), {"k": nk, "v": nv}
 
     # decode: x is (B,1,d); write k/v at slot, attend over valid entries.
@@ -184,12 +187,14 @@ def _attn_sublayer(p, x, cfg, kind, mode, cache, pos, positions, cross=False,
               ).astype(jnp.bfloat16)
     kv_len = jnp.minimum(pos + 1, Sc)
     out = L.attention(q, nk, nv, causal=False, kv_len=kv_len,
-                      cap=cfg.attn_softcap, scale=cfg.attn_scale)
+                      cap=cfg.attn_softcap, scale=cfg.attn_scale,
+                      backend=backend)
     return L.out_proj(ap, out), {"k": nk, "v": nv}
 
 
 def block_apply(kind: str, p, x, cfg: ModelConfig, *, mode: str,
-                cache=None, pos=None, positions=None, memory=None):
+                cache=None, pos=None, positions=None, memory=None,
+                backend=None):
     """Returns (x_out, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
@@ -197,7 +202,7 @@ def block_apply(kind: str, p, x, cfg: ModelConfig, *, mode: str,
     if kind == "mlstm":
         state = (cache or {"mlstm": X.mlstm_state_init(cfg, x.shape[0])})["mlstm"]
         y, ns = X.mlstm_block(p["mlstm"], L.rmsnorm(p["norm1"], x, cfg.norm_eps),
-                              cfg, state)
+                              cfg, state, backend=backend)
         return x + y, {"mlstm": ns}, aux
 
     if kind == "slstm":
@@ -209,14 +214,16 @@ def block_apply(kind: str, p, x, cfg: ModelConfig, *, mode: str,
     h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
 
     if kind in ("hymba_g", "hymba_w"):
-        attn_y, kv = _attn_sublayer(p, h, cfg, kind, mode, cache, pos, positions)
+        attn_y, kv = _attn_sublayer(p, h, cfg, kind, mode, cache, pos,
+                                    positions, backend=backend)
         ssm_state = cache.get("ssm") if (cache and mode != "train") else None
         if mode == "train":
-            ssm_y, ns = S.ssm_forward(p["ssm"], h, cfg, None)
+            ssm_y, ns = S.ssm_forward(p["ssm"], h, cfg, None, backend=backend)
         else:
             if mode == "prefill":
                 ssm_state = None
-            ssm_y, ns = S.ssm_forward(p["ssm"], h, cfg, ssm_state)
+            ssm_y, ns = S.ssm_forward(p["ssm"], h, cfg, ssm_state,
+                                      backend=backend)
         y = 0.5 * (L.rmsnorm(p["norm_a"], attn_y, cfg.norm_eps)
                    + L.rmsnorm(p["norm_s"], ssm_y, cfg.norm_eps))
         x = x + y
@@ -227,14 +234,16 @@ def block_apply(kind: str, p, x, cfg: ModelConfig, *, mode: str,
             new_cache["ssm"] = ns
         return x, new_cache, aux
 
-    attn_y, kv = _attn_sublayer(p, h, cfg, kind, mode, cache, pos, positions)
+    attn_y, kv = _attn_sublayer(p, h, cfg, kind, mode, cache, pos,
+                                positions, backend=backend)
     x = x + attn_y
     new_cache = dict(kv)
 
     if kind == "encdec":
         hx = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
         xa_y, xkv = _attn_sublayer(p, hx, cfg, kind, mode, cache, pos,
-                                   positions, cross=True, memory=memory)
+                                   positions, cross=True, memory=memory,
+                                   backend=backend)
         x = x + xa_y
         new_cache.update(xkv)
         if mode == "decode":
@@ -242,7 +251,7 @@ def block_apply(kind: str, p, x, cfg: ModelConfig, *, mode: str,
 
     h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
     if kind == "moe":
-        y, aux = M.moe_ffn(p["moe"], h2, cfg)
+        y, aux = M.moe_ffn(p["moe"], h2, cfg, backend=backend)
     else:
         y = L.mlp(p["mlp"], h2, cfg.mlp_act)
     return x + y, new_cache, aux

@@ -121,17 +121,37 @@ def _attn_chunk(q_blk, k, v, mask_blk, scale, cap):
 
 def attention(q, k, v, *, causal: bool, window: int = 0, cap: float = 0.0,
               scale: float = 0.0, q_offset=0, kv_len=None,
-              chunk: int = 0):
-    """Memory-bounded multi-query attention (pure jnp, GSPMD-friendly).
+              chunk: int = 0, backend=None):
+    """Multi-query attention with a pluggable kernel backend.
 
     q: (B, Hq, Sq, hd); k, v: (B, Hkv, Sk, hd). GQA via reshape.
     window > 0 applies a sliding-window causal band (i-j < window).
     q_offset: absolute position of q[0] (for decode / chunked prefill).
-    kv_len: number of valid kv entries (scalar, for cache decode); None = Sk.
-    Chunked over the query axis with a lax.scan to bound the logits temp.
+    kv_len: valid kv entries (scalar or (B,), for cache decode); None = Sk.
+
+    backend: kernel backend name (None = the PerfFlags default). With a
+    non-reference backend and no active mesh, prefill/extend run the
+    flash_prefill kernel and cache decode runs flash_decode; otherwise
+    this falls through to the pure-jnp path below — memory-bounded
+    (chunked over the query axis with a lax.scan to bound the logits
+    temp) and GSPMD-friendly.
     """
     from repro.common.perf import get_flags
+    from repro.kernels import backend as KB
     flags = get_flags()
+
+    be = KB.get_backend(backend)
+    if be.name != "reference" and KB.mesh_local():
+        if kv_len is not None and q.shape[2] == 1 and not window:
+            # single-token decode against a (partially) filled cache
+            out = be.decode_attention(q[:, :, 0], k, v, kv_len, cap=cap,
+                                      scale=scale)
+            return out[:, :, None]
+        if kv_len is None:
+            # prefill / train / chunked-prefill extend (q_offset > 0)
+            return be.attention(q, k, v, causal=causal, window=window,
+                                cap=cap, scale=scale, q_offset=q_offset)
+        # remaining shapes (multi-token vs kv_len'd cache) use the jnp path
     chunk = chunk or flags.attn_chunk
     kv_local = True   # no mesh -> KV trivially chip-local
     if flags.attn_constraint == "auto" and q.shape[2] > 1:

@@ -80,7 +80,8 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
 # ------------------------------------------------------------------ stack ----
 
 def _apply_stack(params, cfg: ModelConfig, x, *, mode, cache=None, pos=None,
-                 positions=None, memory=None, remat=False, seq_axis=None):
+                 positions=None, memory=None, remat=False, seq_axis=None,
+                 backend=None):
     """Run all segments. Returns (x, new_segment_caches, aux)."""
     from repro.distributed.annotate import constrain_seq
     new_segs = []
@@ -98,7 +99,8 @@ def _apply_stack(params, cfg: ModelConfig, x, *, mode, cache=None, pos=None,
             for ui, kind in enumerate(unit):
                 h, nc, a = block_apply(kind, p_r[ui], h, cfg, mode=mode,
                                        cache=c_r[ui], pos=pos,
-                                       positions=positions, memory=memory)
+                                       positions=positions, memory=memory,
+                                       backend=backend)
                 ncs.append(nc)
                 aux = aux + a
             if seq_axis:
@@ -115,14 +117,15 @@ def _apply_stack(params, cfg: ModelConfig, x, *, mode, cache=None, pos=None,
     return x, new_segs, aux_total
 
 
-def _encode(params, cfg: ModelConfig, frames):
+def _encode(params, cfg: ModelConfig, frames, backend=None):
     """Whisper encoder over precomputed frame embeddings (B, S_enc, d)."""
     x = frames + L.sinusoidal_positions(frames.shape[1],
                                         cfg.d_model).astype(frames.dtype)
     enc = params["encoder"]
 
     def body(h, p_r):
-        h, _, _ = block_apply("enc", p_r, h, cfg, mode="train")
+        h, _, _ = block_apply("enc", p_r, h, cfg, mode="train",
+                              backend=backend)
         return h, ()
 
     x, _ = jax.lax.scan(body, x, enc["layers"])
@@ -198,28 +201,32 @@ def xent_chunked(params, cfg: ModelConfig, x, labels, chunk: int = 256):
 
 # ------------------------------------------------------------- public API ----
 
-def train_loss(params, cfg: ModelConfig, batch, remat: bool = True):
+def train_loss(params, cfg: ModelConfig, batch, remat: bool = True,
+               backend=None):
     """Full training forward -> scalar LM loss (+ MoE aux)."""
     if cfg.n_enc_layers:
-        memory = _encode(params, cfg, batch["frames"])
+        memory = _encode(params, cfg, batch["frames"], backend=backend)
     else:
         memory = None
     x, positions = _embed_inputs(params, cfg, batch)
     x, _, aux = _apply_stack(params, cfg, x, mode="train",
-                             positions=positions, memory=memory, remat=remat)
+                             positions=positions, memory=memory, remat=remat,
+                             backend=backend)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     loss = xent_chunked(params, cfg, x, batch["labels"])
     return loss + aux
 
 
-def prefill(params, cfg: ModelConfig, batch, cache_len: int, seq_axis=None):
+def prefill(params, cfg: ModelConfig, batch, cache_len: int, seq_axis=None,
+            backend=None):
     """Process a prompt; returns (last-token logits (B,V), filled cache).
 
     seq_axis: mesh axis name for sequence-parallel prefill (context
     parallelism) — the residual stream's seq dim is pinned to it.
+    backend: kernel backend for the attention/router/scan hot paths.
     """
     if cfg.n_enc_layers:
-        memory = _encode(params, cfg, batch["frames"])
+        memory = _encode(params, cfg, batch["frames"], backend=backend)
         enc_len = memory.shape[1]
     else:
         memory, enc_len = None, 0
@@ -231,14 +238,15 @@ def prefill(params, cfg: ModelConfig, batch, cache_len: int, seq_axis=None):
     x, new_segs, _ = _apply_stack(params, cfg, x, mode="prefill",
                                   cache=cache, pos=jnp.zeros((), jnp.int32),
                                   positions=positions, memory=memory,
-                                  seq_axis=seq_axis)
+                                  seq_axis=seq_axis, backend=backend)
     x_last = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
     logits = _logits(params, cfg, x_last)[:, 0]
     return logits, {"segments": new_segs,
                     "pos": jnp.asarray(S, jnp.int32)}
 
 
-def prefill_extend(params, cfg: ModelConfig, cache, batch, n_valid=None):
+def prefill_extend(params, cfg: ModelConfig, cache, batch, n_valid=None,
+                   backend=None):
     """Chunked-prefill continuation: advance a pre-filled cache through S
     new tokens in ONE pass (the engine's prompt-prefix cache uses this to
     attach per-request suffixes to a shared prefix prefill).
@@ -260,19 +268,20 @@ def prefill_extend(params, cfg: ModelConfig, cache, batch, n_valid=None):
     x, positions = _embed_inputs(params, cfg, batch, pos=pos)
     x, new_segs, _ = _apply_stack(params, cfg, x, mode="extend",
                                   cache=cache, pos=pos,
-                                  positions=positions)
+                                  positions=positions, backend=backend)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
     logits = _logits(params, cfg, last)[:, 0]
     return logits, {"segments": new_segs, "pos": pos + n_valid}
 
 
-def decode_step(params, cfg: ModelConfig, cache, batch):
+def decode_step(params, cfg: ModelConfig, cache, batch, backend=None):
     """One decode step. batch["tokens"]: (B,1). Returns (logits, cache)."""
     pos = cache["pos"]
     x, positions = _embed_inputs(params, cfg, batch, pos=pos)
     x, new_segs, _ = _apply_stack(params, cfg, x, mode="decode",
-                                  cache=cache, pos=pos, positions=positions)
+                                  cache=cache, pos=pos, positions=positions,
+                                  backend=backend)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = _logits(params, cfg, x)[:, 0]
     return logits, {"segments": new_segs, "pos": pos + 1}

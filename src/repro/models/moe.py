@@ -58,10 +58,22 @@ def capacity(mcfg: MoEConfig, n_tokens: int) -> int:
     return max(8, -(-c // 8) * 8)      # round up to a multiple of 8
 
 
-def router_topk(router_w, x, mcfg: MoEConfig):
-    """x: (B,S,d) -> (weights (B,S,k), idx (B,S,k) int32, probs (B,S,E))."""
+def router_topk(router_w, x, mcfg: MoEConfig, backend=None):
+    """x: (B,S,d) -> (weights (B,S,k), idx (B,S,k) int32, probs (B,S,E)).
+
+    With a non-reference kernel backend (and no active mesh), the fused
+    softmax+top-k Pallas kernel selects the experts; probs are still
+    computed here — the load-balance aux loss needs the full (B,S,E)
+    distribution either way."""
+    from repro.kernels import backend as KB
     logits = x.astype(jnp.float32) @ router_w            # (B,S,E)
     probs = jax.nn.softmax(logits, axis=-1)
+    be = KB.get_backend(backend)
+    if be.name != "reference" and KB.mesh_local():
+        B, S, E = logits.shape
+        w, idx = be.router_topk(logits.reshape(B * S, E), mcfg.top_k)
+        return (w.reshape(B, S, mcfg.top_k),
+                idx.reshape(B, S, mcfg.top_k), probs)
     w, idx = jax.lax.top_k(probs, mcfg.top_k)
     w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
     return w, idx, probs
@@ -179,6 +191,7 @@ def _dispatch_shard_map(p, x, w, idx, mcfg, act):
     and no dispatch matmuls at all. Falls back to `gather` without a mesh.
     """
     from repro.distributed.annotate import _mesh
+    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     mesh = _mesh()
     if mesh is None or "model" not in mesh.axis_names:
@@ -223,21 +236,21 @@ def _dispatch_shard_map(p, x, w, idx, mcfg, act):
         return jax.lax.psum(y.astype(xb.dtype), "model")
 
     p_exp = {k: p[k] for k in ("w_gate", "w_up", "w_down")}
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P("model"), p_exp),
                   P(bspec, None, None), P(bspec, None, None),
                   P(bspec, None, None)),
-        out_specs=P(bspec, None, None), check_vma=False)
+        out_specs=P(bspec, None, None), check_rep=False)
     return fn(p_exp, x, w, idx)
 
 
-def moe_ffn(p, x, cfg: ModelConfig, dispatch: str = None):
+def moe_ffn(p, x, cfg: ModelConfig, dispatch: str = None, backend=None):
     """Full MoE FFN layer. Returns (y, aux_loss)."""
     from repro.common.perf import get_flags
     mcfg = cfg.moe
     mode = dispatch or get_flags().moe_dispatch
-    w, idx, probs = router_topk(p["router"], x, mcfg)
+    w, idx, probs = router_topk(p["router"], x, mcfg, backend=backend)
     aux = load_balance_loss(probs, idx, mcfg) * mcfg.aux_loss_weight
     # Dispatch pins only help bulk (train/prefill) token exchange; for
     # decode (S=1) they forced per-step all-to-alls that regressed the

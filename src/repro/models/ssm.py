@@ -77,17 +77,22 @@ def _scan_chunk(h0, a, bx):
     return h_all, h_all[:, -1]
 
 
-def selective_scan(p, x, h0, chunk: int = 0):
+def selective_scan(p, x, h0, chunk: int = 0, backend=None):
     """Selective SSM over a full sequence.
 
     x: (B,S,di) conv+silu activations; h0: (B,di,n) initial state.
     Returns (y (B,S,di) float32, h_last (B,di,n)).
+
+    backend: kernel backend — a non-reference backend (without an active
+    mesh) runs the blocked Pallas ssm_scan kernel, state-carried in VMEM,
+    instead of the chunked associative scan below.
 
     Perf knobs (common.perf): chunk length bounds the (B,chunk,di,n)
     associative-scan temporaries; ssm_scan_dtype runs the intra-chunk
     elements in bf16 while the carried state stays fp32.
     """
     from repro.common.perf import get_flags
+    from repro.kernels import backend as KB
     flags = get_flags()
     chunk = chunk or flags.ssm_scan_chunk
     scan_dtype = jnp.dtype(flags.ssm_scan_dtype)
@@ -97,6 +102,12 @@ def selective_scan(p, x, h0, chunk: int = 0):
     n = A.shape[-1]
     dt, B_, C_ = _ssm_params(p, x, None)
     xf = x.astype(jnp.float32)
+
+    be = KB.get_backend(backend)
+    if be.name != "reference" and KB.mesh_local():
+        y, h_last = be.selective_scan(dt, xf, B_, C_, A, h0)
+        y = y + xf * p["D"]
+        return y, h_last
 
     def chunk_body(h, inp):
         dt_c, B_c, C_c, x_c = inp                  # (B,C,...) chunk slices
@@ -124,7 +135,7 @@ def selective_scan(p, x, h0, chunk: int = 0):
     return y, h_last
 
 
-def ssm_forward(p, x, cfg: ModelConfig, state=None):
+def ssm_forward(p, x, cfg: ModelConfig, state=None, backend=None):
     """Full mamba layer over a sequence. x: (B,S,d).
 
     state: None (fresh) or dict with h (B,di,n), conv (B,K-1,di).
@@ -145,7 +156,7 @@ def ssm_forward(p, x, cfg: ModelConfig, state=None):
         di = xi.shape[-1]
         h0 = jnp.zeros((B, di, scfg.d_state), jnp.float32)
     act = jax.nn.silu(conv)
-    y, h_last = selective_scan(p, act, h0)
+    y, h_last = selective_scan(p, act, h0, backend=backend)
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
     new_state = {
         "h": h_last,

@@ -49,44 +49,67 @@ def _mlstm_chunk(carry, qkvif, scale):
 
     carry: (C (B,H,hd,hd), n (B,H,hd), m (B,H)) — all float32.
     qkvif: q,k,v (B,H,L,hd) float32; i_pre,f_pre (B,H,L) float32.
+
+    The numerator (q against the carried C plus the intra-chunk (L,L)
+    interaction) is chunk-parallel — that is the MXU-heavy part. The
+    *state trajectory* (n_t, m_t) and the carries are stepped with the
+    exact operation order of the sequential oracle (kernels/ref.mlstm_ref):
+    the output divides by max(|n_t.q_t|, exp(-m_t)), a catastrophically
+    cancelled dot, so any chunkwise reassociation of n_t is amplified
+    without bound at near-zero denominators. The per-step scan is cheap
+    ((B,H,hd) elementwise) and keeps chunk seams bit-identical to the
+    sequential recurrence.
     """
     C, n, m = carry
     q, k, v, i_pre, f_pre = qkvif
     L = q.shape[2]
     logf = jax.nn.log_sigmoid(f_pre)                        # (B,H,L)
     F = jnp.cumsum(logf, axis=-1)                           # F_t = sum_{s<=t}
+
+    ks = k * scale
+
+    def state_step(st, inp):
+        # mirrors mlstm_ref's per-step ops exactly (same rounding)
+        C_s, n_s, m_s = st
+        ks_t, v_t, i_t, logf_t = inp
+        m_new = jnp.maximum(logf_t + m_s, i_t)
+        fw = jnp.exp(logf_t + m_s - m_new)[..., None]
+        iw = jnp.exp(i_t - m_new)[..., None]
+        C_s = (C_s * fw[..., None]
+               + iw[..., None] * (ks_t[..., :, None] * v_t[..., None, :]))
+        n_s = n_s * fw + iw * ks_t
+        return (C_s, n_s, m_new), (n_s, m_new)
+
+    sw = lambda t: jnp.moveaxis(t, 2, 0)                    # time-leading
+    (C_new, n_new, m_end), (n_traj, m_traj) = jax.lax.scan(
+        state_step, (C, n, m), (sw(ks), sw(v), sw(i_pre), sw(logf)))
+    n_t = jnp.moveaxis(n_traj, 0, 2)                        # (B,H,L,hd)
+    m_t = jnp.moveaxis(m_traj, 0, -1)                       # (B,H,L)
+
+    # numerator, chunk-parallel
     # decay(t,s) = F_t - F_s + i_s  for s <= t
     dec = F[..., :, None] - F[..., None, :] + i_pre[..., None, :]
     tri = jnp.tril(jnp.ones((L, L), bool))
     dec = jnp.where(tri, dec, -jnp.inf)
-    m_intra = jnp.max(dec, axis=-1)                         # (B,H,L)
-    m_t = jnp.maximum(F + m[..., None], m_intra)            # running stabilizer
-    # inter-chunk part
     w_inter = jnp.exp(F + m[..., None] - m_t)               # (B,H,L)
     h_inter = jnp.einsum("bhld,bhde->bhle", q, C) * w_inter[..., None]
-    n_inter = n[:, :, None, :] * w_inter[..., None]
-    # intra-chunk part
     w_intra = jnp.exp(dec - m_t[..., None])                 # (B,H,L,L)
     logits = jnp.einsum("bhld,bhsd->bhls", q, k) * scale
     h_intra = jnp.einsum("bhls,bhls,bhsd->bhld", logits, w_intra, v)
-    n_intra = jnp.einsum("bhls,bhsd->bhld", w_intra, k * scale)
-    n_t = n_inter + n_intra
     denom = jnp.maximum(jnp.abs(jnp.einsum("bhld,bhld->bhl", n_t, q)),
                         jnp.exp(-m_t))
     h = (h_inter + h_intra) / denom[..., None]
-    # chunk-end state
-    m_end_intra = jnp.max(F[..., -1:] - F + i_pre, axis=-1)
-    m_end = jnp.maximum(F[..., -1] + m, m_end_intra)
-    wC = jnp.exp(F[..., -1:] - F + i_pre - m_end[..., None])  # (B,H,L)
-    C_new = (C * jnp.exp(F[..., -1] + m - m_end)[..., None, None]
-             + jnp.einsum("bhl,bhld,bhle->bhde", wC, k * scale, v))
-    n_new = (n * jnp.exp(F[..., -1] + m - m_end)[..., None]
-             + jnp.einsum("bhl,bhld->bhd", wC, k * scale))
     return (C_new, n_new, m_end), h
 
 
-def mlstm_seq(p, x_in, cfg: ModelConfig, state):
-    """x_in: (B,S,dh) inner activations -> (y (B,S,dh), new_state)."""
+def mlstm_seq(p, x_in, cfg: ModelConfig, state, backend=None):
+    """x_in: (B,S,dh) inner activations -> (y (B,S,dh), new_state).
+
+    backend: kernel backend — a non-reference backend (without an active
+    mesh) runs the VMEM-resident Pallas mlstm_scan kernel instead of the
+    chunkwise lax.scan below (identical recurrence; the kernel mirrors
+    the sequential oracle step-for-step)."""
+    from repro.kernels import backend as KB
     B, S, dh = x_in.shape
     H = cfg.n_heads
     hd = dh // H
@@ -99,6 +122,12 @@ def mlstm_seq(p, x_in, cfg: ModelConfig, state):
     gif = (x_in.astype(jnp.float32) @ p["w_if"]).reshape(B, S, 2, H)
     i_pre = gif[:, :, 0].transpose(0, 2, 1) + p["b_i"][None, :, None]
     f_pre = gif[:, :, 1].transpose(0, 2, 1) + p["b_f"][None, :, None]
+
+    be = KB.get_backend(backend)
+    if be.name != "reference" and KB.mesh_local():
+        h, carry = be.mlstm_scan(q, k, v, i_pre, f_pre, state, scale=scale)
+        y = h.transpose(0, 2, 1, 3).reshape(B, S, dh).astype(x_in.dtype)
+        return y, carry
 
     carry = state
     if S <= L:
@@ -137,11 +166,11 @@ def mlstm_state_init(cfg: ModelConfig, batch: int):
             jnp.full((batch, H), -1e30, jnp.float32))
 
 
-def mlstm_block(p, x, cfg: ModelConfig, state):
+def mlstm_block(p, x, cfg: ModelConfig, state, backend=None):
     """Full mLSTM block: up-proj -> mLSTM ⊙ silu(gate) -> down-proj."""
     h = x @ p["up"]
     inner, gate = jnp.split(h, 2, axis=-1)
-    y, new_state = mlstm_seq(p, inner, cfg, state)
+    y, new_state = mlstm_seq(p, inner, cfg, state, backend=backend)
     y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(gate)
     return y @ p["down"], new_state
 

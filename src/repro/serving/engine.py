@@ -21,6 +21,14 @@ Two serving-pipeline extensions (see DESIGN.md §Pipeline concurrency):
 This is the single-host engine the examples serve the planner with; the
 distributed story (pjit over the production mesh) reuses exactly the same
 step functions via launch/serve.py.
+
+``backend`` selects the kernel backend (kernels/backend.py) for every
+jitted step — ``"pallas"`` routes prefill/extend attention through
+flash_prefill, the continuous-batching decode through flash_decode (per
+slot (B,) fill levels via scalar prefetch), MoE routing through the
+fused top-k kernel and SSM/mLSTM state scans through their Pallas
+kernels; ``"reference"`` (the default) keeps the pure-jnp paths.
+DESIGN.md §Kernel backends has the selection rules and parity contract.
 """
 from __future__ import annotations
 
@@ -78,11 +86,15 @@ def _insert_slot(batched, single, slot: int):
 
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
-                 cache_len: int = 512, seed: int = 0):
+                 cache_len: int = 512, seed: int = 0,
+                 backend: Optional[str] = None):
+        from repro.kernels.backend import get_backend
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.cache_len = cache_len
+        # resolve once so every jitted step traces one fixed backend
+        self.backend = get_backend(backend).name
         self.rng = jax.random.PRNGKey(seed)
         self.cache = init_cache(cfg, max_batch, cache_len)
         self.cache["pos"] = jnp.zeros((max_batch,), jnp.int32)
@@ -95,11 +107,15 @@ class InferenceEngine:
                       "tokens_generated": 0, "prefix_hits": 0,
                       "prefix_tokens_saved": 0}
 
+        be = self.backend
         self._prefill = jax.jit(
-            lambda p, b: prefill(p, cfg, b, cache_len=cache_len))
-        self._decode = jax.jit(lambda p, c, b: decode_step(p, cfg, c, b))
+            lambda p, b: prefill(p, cfg, b, cache_len=cache_len,
+                                 backend=be))
+        self._decode = jax.jit(
+            lambda p, c, b: decode_step(p, cfg, c, b, backend=be))
         self._extend = jax.jit(
-            lambda p, c, b, n: prefill_extend(p, cfg, c, b, n_valid=n))
+            lambda p, c, b, n: prefill_extend(p, cfg, c, b, n_valid=n,
+                                              backend=be))
         kinds = {k for unit, _ in cfg.segments for k in unit}
         # multi-token cache extension: no ring buffers / cross-attention;
         # bucket-padded extends additionally require a stateless

@@ -62,6 +62,8 @@ class PipelineStats:
     peak_concurrent: int = 0
     engine_turns: int = 0
 
+    engine_backend: str = ""     # kernel backend of the mirrored engine
+
     def summary(self) -> Dict[str, float]:
         sizes = self.gate_batch_sizes or [0]
         return {"admitted": self.admitted,
@@ -69,7 +71,8 @@ class PipelineStats:
                 "mean_gate_batch": sum(sizes) / max(len(sizes), 1),
                 "ticks": self.ticks,
                 "peak_concurrent": self.peak_concurrent,
-                "engine_turns": self.engine_turns}
+                "engine_turns": self.engine_turns,
+                "engine_backend": self.engine_backend}
 
 
 class GeckOptPipeline:
@@ -87,6 +90,11 @@ class GeckOptPipeline:
         self.config = config or PipelineConfig()
         self.engine = engine
         self.stats = PipelineStats()
+        if engine is not None:
+            # kernel backend rides in with the engine (see engine.py);
+            # surfaced here so pipeline summaries record which backend
+            # served the run end-to-end
+            self.stats.engine_backend = getattr(engine, "backend", "")
         self._engine_sessions = []
 
     # ---------------------------------------------------------- stages ----

@@ -80,9 +80,10 @@ def test_ssm_scan_sweep(B, S, di, n):
     B_ = _rand((B, S, n))
     C_ = _rand((B, S, n))
     A = -jnp.exp(_rand((di, n)))
-    y = ssm_scan(dt, x, B_, C_, A, interpret=True)
-    yr, _ = selective_scan_ref(dt, x, B_, C_, A)
+    y, h_last = ssm_scan(dt, x, B_, C_, A, interpret=True)
+    yr, hr = selective_scan_ref(dt, x, B_, C_, A)
     assert float(jnp.max(jnp.abs(y - yr))) < 1e-3
+    assert float(jnp.max(jnp.abs(h_last - hr))) < 1e-3
 
 
 def test_chunked_mlstm_matches_sequential_oracle():
