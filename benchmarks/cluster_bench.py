@@ -1,0 +1,168 @@
+"""Cluster router-policy benchmark: intent affinity vs oblivious routing.
+
+Serves ONE seeded synthetic workload (serving/workload.py — skewed
+intent mix, seeded per-request samplers, multi-turn sessions) through
+the same N-replica ``EngineCluster`` under each routing policy, and
+tabulates what the router changes and what it must not change.
+
+Because every request carries a sampler seed, its output tokens are a
+pure function of the workload — NOT of placement — so ``tokens_out``
+must be identical across policies (the table's ``tokens_equal`` column
+asserts it against round_robin). What the router *does* move:
+
+  policy            round_robin | least_loaded | intent_affinity;
+  prefix_hit        cluster prefix-hit ratio (hits / admissions). The
+                    affinity router sends same-intent traffic to the
+                    replica holding that intent's cached prefix prefill,
+                    so this is the headline column: affinity >=
+                    round_robin is the acceptance bar;
+  prefill_tok_saved prompt tokens not recomputed thanks to those hits;
+  ttft_p50/p95      ticks from arrival to first token (one tick = one
+                    cluster-wide continuous-batching step);
+  e2e_p95           ticks from arrival to completion;
+  qwait_p95         ticks spent queued before a slot freed up;
+  sla               fraction of requests finishing within their
+                    per-request deadline;
+  util_min/max      per-replica slot utilization spread — affinity
+                    concentrates the hot intent on its home replica
+                    (high max, low min), the load-aware policies
+                    flatten it: the cache-locality vs load-balance
+                    trade the router picks;
+  tokens_out        total generated tokens (identical by construction).
+
+Writes results/cluster_bench.{json,md}.
+
+  PYTHONPATH=src python benchmarks/cluster_bench.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+COLUMNS = ("policy", "prefix_hit", "prefill_tok_saved", "ttft_p50",
+           "ttft_p95", "e2e_p95", "qwait_p95", "sla", "util_min",
+           "util_max", "tokens_out", "tokens_equal")
+
+
+def bench(n_replicas: int = 4, n_sessions: int = 32, seed: int = 0,
+          max_batch: int = 2, cache_len: int = 192):
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models.model import init_params
+    from repro.serving.cluster import ROUTER_POLICIES, EngineCluster
+    from repro.serving.workload import (WorkloadConfig, make_workload,
+                                        register_workload_prefixes,
+                                        skewed_mix, workload_intents)
+
+    cfg = get_smoke_config("planner-proxy-100m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    wcfg = WorkloadConfig(n_sessions=n_sessions, seed=seed,
+                          intent_mix=skewed_mix(hot_frac=0.7),
+                          profile="poisson", inter_arrival=1.0,
+                          max_turns=2, max_new_tokens=4,
+                          temperature=0.8, sla_ticks=48)
+    requests = make_workload(wcfg)
+
+    # one replica pool, reset between policies: jit-compile once,
+    # identical engine state for every router
+    pool = EngineCluster(cfg, params, n_replicas, max_batch=max_batch,
+                         cache_len=cache_len, seed=seed).replicas
+    rows, ref_outputs = [], None
+    for policy in ROUTER_POLICIES:
+        for e in pool:
+            e.reset()
+        cluster = EngineCluster(engines=pool, router=policy)
+        register_workload_prefixes(cluster, requests)
+        t0 = time.time()
+        stats = cluster.run_workload(requests)
+        wall = time.time() - t0
+        s = stats.summary()
+        outputs = stats.outputs()
+        if ref_outputs is None:
+            ref_outputs = outputs
+        utils = [r["utilization"] for r in s["per_replica"]]
+        rows.append({
+            "policy": policy,
+            "prefix_hit": s["prefix_hit_ratio"],
+            "prefill_tok_saved": sum(r["prefix_tokens_saved"]
+                                     for r in s["per_replica"]),
+            "ttft_p50": s["ttft_p50"], "ttft_p95": s["ttft_p95"],
+            "e2e_p95": s["e2e_p95"], "qwait_p95": s["queue_wait_p95"],
+            "sla": s["sla_attainment"],
+            "util_min": min(utils), "util_max": max(utils),
+            "tokens_out": s["tokens_out"],
+            "tokens_equal": outputs == ref_outputs,
+            "ticks": s["ticks"], "finished": s["finished"],
+            "wall_s": round(wall, 2),
+            "per_replica": s["per_replica"],
+        })
+    by = {r["policy"]: r for r in rows}
+    meta = {
+        "n_replicas": n_replicas, "max_batch": max_batch,
+        "n_sessions": n_sessions, "requests": len(requests),
+        "intent_sessions": workload_intents(requests),
+        "workload": {"profile": wcfg.profile, "hot_frac": 0.7,
+                     "max_turns": wcfg.max_turns,
+                     "temperature": wcfg.temperature, "seed": seed},
+        "affinity_beats_round_robin": (
+            by["intent_affinity"]["prefix_hit"]
+            >= by["round_robin"]["prefix_hit"]),
+        "tokens_identical_across_policies": all(r["tokens_equal"]
+                                                for r in rows),
+    }
+    return rows, meta
+
+
+def write_results(rows, meta):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    md = ["# cluster_bench — router policies on the intent-affinity "
+          "serving cluster", "",
+          f"{meta['n_replicas']} replicas x {meta['max_batch']} slots, "
+          f"{meta['requests']} requests from {meta['n_sessions']} "
+          f"sessions (skewed mix, hot_frac="
+          f"{meta['workload']['hot_frac']}, "
+          f"profile={meta['workload']['profile']}, seeded samplers at "
+          f"T={meta['workload']['temperature']}).", "",
+          "| " + " | ".join(COLUMNS) + " |",
+          "|" + "---|" * len(COLUMNS)]
+    for r in rows:
+        md.append("| " + " | ".join(str(r[c]) for c in COLUMNS) + " |")
+    md += ["",
+           f"- affinity >= round_robin on prefix-hit ratio: "
+           f"**{meta['affinity_beats_round_robin']}**",
+           f"- identical tokens_out under every policy (seeded "
+           f"samplers): **{meta['tokens_identical_across_policies']}**",
+           "",
+           "Interpretation: `intent_affinity` turns the per-intent "
+           "prompt-prefix cache into a cluster-level win — same-intent "
+           "traffic rides one replica's cached prefill — at the price "
+           "of a hotter home replica (`util_max`) and longer queues "
+           "there (`qwait_p95`); the load-aware policies make the "
+           "opposite trade. Routing never changes WHAT is generated, "
+           "only where and how fast (columns doc in the module "
+           "docstring)."]
+    with open(os.path.join(RESULTS_DIR, "cluster_bench.md"), "w") as f:
+        f.write("\n".join(md) + "\n")
+    with open(os.path.join(RESULTS_DIR, "cluster_bench.json"), "w") as f:
+        json.dump({"meta": meta, "rows": rows}, f, indent=1)
+
+
+def main():
+    rows, meta = bench()
+    write_results(rows, meta)
+    for r in rows:
+        print(f"{r['policy']:16s} hit={r['prefix_hit']:.3f} "
+              f"ttft_p95={r['ttft_p95']:.0f} qwait_p95="
+              f"{r['qwait_p95']:.0f} util={r['util_min']:.2f}.."
+              f"{r['util_max']:.2f} tokens={r['tokens_out']} "
+              f"equal={r['tokens_equal']}")
+    print(f"affinity_beats_round_robin={meta['affinity_beats_round_robin']}"
+          f" tokens_identical={meta['tokens_identical_across_policies']}")
+    return rows, meta
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,7 @@ from repro.env.evaluator import evaluate_results
 from repro.env.tasks import make_benchmark
 from repro.env.world import build_world
 from repro.models.model import count_params_analytic, init_params
+from repro.serving.cluster import EngineCluster, ROUTER_POLICIES
 from repro.serving.engine import InferenceEngine
 from repro.serving.neural_planner import BatchedNeuralIntentClassifier
 from repro.serving.pipeline import GeckOptPipeline, PipelineConfig
@@ -44,18 +45,30 @@ def main():
     ap.add_argument("--backend", default=None,
                     choices=("reference", "pallas"),
                     help="kernel backend for the engine's jitted steps")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve planner turns on an EngineCluster of N "
+                         "replicas instead of one engine")
+    ap.add_argument("--router", default="intent_affinity",
+                    choices=ROUTER_POLICIES,
+                    help="cluster routing policy (with --replicas > 1)")
     args = ap.parse_args()
 
-    # --- the serving fleet: one engine + one batched gate model ----------
+    # --- the serving fleet: engine(s) + one batched gate model -----------
     cfg = get_smoke_config("planner-proxy-100m")
     params = init_params(jax.random.PRNGKey(0), cfg)
     # cache_len must hold the longest per-intent planner prefix (~2.5k
     # tokens of system prompt + catalog) plus the turn suffix
-    engine = InferenceEngine(cfg, params, max_batch=4, cache_len=4096,
-                             backend=args.backend)
+    if args.replicas > 1:
+        engine = EngineCluster(cfg, params, args.replicas,
+                               router=args.router, max_batch=4,
+                               cache_len=4096, backend=args.backend)
+    else:
+        engine = InferenceEngine(cfg, params, max_batch=4,
+                                 cache_len=4096, backend=args.backend)
     classifier = BatchedNeuralIntentClassifier(cfg, params)
     print(f"planner engine up: {count_params_analytic(cfg)/1e6:.1f}M "
-          f"params, 4 slots; batched intent gate ready")
+          f"params, {args.replicas} replica(s) x 4 slots; "
+          f"batched intent gate ready")
 
     # --- the platform ----------------------------------------------------
     world = build_world(0)
@@ -88,6 +101,11 @@ def main():
           f"{es['prefix_hits']} prefix hits, "
           f"{es['prefix_tokens_saved']} prefill tokens saved, "
           f"{es['tokens_generated']} tokens decoded")
+    if args.replicas > 1:
+        for r in es["per_replica"]:
+            print(f"  replica {r['replica']}: {r['admissions']} turns, "
+                  f"{r['prefix_hits']} prefix hits, "
+                  f"{r['tokens_generated']} tokens")
     print(f"quality: success={100*rep.success_rate:.1f}% "
           f"tokens/task={rep.tokens_per_task/1000:.2f}k "
           f"steps={rep.steps_per_task:.2f} "

@@ -18,6 +18,13 @@ sessions round-robin like continuous batching at the agent level.
 equivalent: per-session state (workspace rng, planner rng, ledger) is
 isolated, so the interleaving order cannot change any task's outcome
 (see DESIGN.md §Pipeline concurrency).
+
+At serving scale the pipeline mirrors each session's planner turns onto
+an inference engine — a single ``InferenceEngine`` or a multi-replica
+``EngineCluster`` whose intent-affinity router keeps every session on
+the replica caching its gated intent's prompt prefix (DESIGN.md
+§Cluster serving). Session isolation is what makes that safe: a
+session's outcome is independent of which replica serves its turns.
 """
 from __future__ import annotations
 

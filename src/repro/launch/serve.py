@@ -2,6 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch planner-proxy-100m \
       --smoke --requests 16 --max-new 24
+
+With ``--replicas N`` the launcher serves a synthetic mixed-intent
+workload (serving/workload.py) on an N-replica ``EngineCluster``
+instead, and reports cluster-level tick metrics:
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke --replicas 4 \
+      --router intent_affinity --requests 32 --profile bursty --skew 0.7
 """
 from __future__ import annotations
 
@@ -12,9 +19,45 @@ import jax
 
 from repro.configs import get_config, get_smoke_config
 from repro.models.model import init_params
+from repro.serving.cluster import ROUTER_POLICIES, EngineCluster
 from repro.serving.engine import InferenceEngine
 from repro.serving.sampling import SamplerConfig
+from repro.serving.workload import (PROFILES, WorkloadConfig,
+                                    make_workload,
+                                    register_workload_prefixes,
+                                    skewed_mix, uniform_mix)
 from repro.training.checkpoint import load_checkpoint
+
+
+def serve_cluster(cfg, params, args):
+    cluster = EngineCluster(cfg, params, args.replicas,
+                            router=args.router,
+                            max_batch=args.max_batch,
+                            cache_len=args.cache_len,
+                            backend=args.backend)
+    mix = (skewed_mix(hot_frac=args.skew) if args.skew > 0
+           else uniform_mix())
+    reqs = make_workload(WorkloadConfig(
+        n_sessions=args.requests, intent_mix=mix, profile=args.profile,
+        max_turns=args.turns, max_new_tokens=args.max_new,
+        temperature=args.temperature, seed=0))
+    register_workload_prefixes(cluster, reqs)
+    t0 = time.time()
+    stats = cluster.run_workload(reqs)
+    dt = time.time() - t0
+    s = stats.summary()
+    print(f"cluster[{args.replicas}x{args.max_batch} slots, "
+          f"router={args.router}] served {s['finished']}/{s['requests']} "
+          f"requests in {s['ticks']} ticks ({dt:.2f}s wall)")
+    print(f"ttft p50/p95 {s['ttft_p50']:.0f}/{s['ttft_p95']:.0f} ticks | "
+          f"e2e p50/p95 {s['e2e_p50']:.0f}/{s['e2e_p95']:.0f} | "
+          f"queue-wait p95 {s['queue_wait_p95']:.0f} | "
+          f"SLA {100 * s['sla_attainment']:.1f}%")
+    print(f"prefix-hit ratio {s['prefix_hit_ratio']:.2f} | "
+          f"{s['tokens_out']} tokens out")
+    for r in s["per_replica"]:
+        print(f"  replica {r['replica']}: {r['admissions']} admissions, "
+              f"hit {r['hit_ratio']:.2f}, util {r['utilization']:.2f}")
 
 
 def main():
@@ -30,13 +73,30 @@ def main():
     ap.add_argument("--backend", default=None,
                     choices=("reference", "pallas"),
                     help="kernel backend (default: PerfFlags.kernel_backend)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve an EngineCluster of N replicas (> 1)")
+    ap.add_argument("--router", default="intent_affinity",
+                    choices=ROUTER_POLICIES)
+    ap.add_argument("--profile", default="uniform", choices=PROFILES,
+                    help="workload arrival profile (cluster mode)")
+    ap.add_argument("--skew", type=float, default=0.0,
+                    help="hot-intent traffic fraction in [0, 1] "
+                         "(0 = uniform mix, 1 = all hot)")
+    ap.add_argument("--turns", type=int, default=1,
+                    help="max turns per session (cluster mode)")
     args = ap.parse_args()
+    if not 0.0 <= args.skew <= 1.0:
+        ap.error(f"--skew must be in [0, 1], got {args.skew}")
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch))
     params = init_params(jax.random.PRNGKey(0), cfg)
     if args.checkpoint:
         params = load_checkpoint(args.checkpoint, params)
+
+    if args.replicas > 1:
+        serve_cluster(cfg, params, args)
+        return
 
     engine = InferenceEngine(cfg, params, max_batch=args.max_batch,
                              cache_len=args.cache_len,

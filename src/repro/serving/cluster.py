@@ -1,0 +1,475 @@
+"""Intent-affinity serving cluster: N engine replicas behind a router.
+
+The paper's platform is "a massively parallel Copilot platform with
+over 100 GPT-4-Turbo nodes"; a single ``InferenceEngine`` models its
+token economics but not its fleet shape. ``EngineCluster`` owns N
+replicas — each with its own slot pool, prompt-prefix cache and kernel
+backend — and places every request through a pluggable router:
+
+  * ``round_robin``        — cycle replicas in submission order;
+  * ``least_loaded``       — min (busy slots + queue depth), ties to the
+                             lowest replica index;
+  * ``intent_affinity``    — consistent-hash (rendezvous) the request's
+    ``prefix_key`` onto the replica that registered that intent's
+    prompt prefix, so same-intent traffic lands where the prefix
+    prefill is already cached — the serving-side analogue of GeckOpt's
+    token savings. Optionally spills to least-loaded when the home
+    replica's load crosses ``spill_load``; keyless requests fall back
+    to least-loaded.
+
+``register_prefix`` installs an intent prefix on its rendezvous *home*
+replica only: affinity keeps hitting that cache while oblivious
+policies pay a full prefill on every other replica — per-replica
+prefix-hit rates in ``ClusterStats`` quantify the gap
+(benchmarks/cluster_bench.py tabulates it).
+
+Time is the deterministic tick clock of ``step()`` (one continuous-
+batching iteration on every replica per tick); ``run_workload`` drives
+a ``serving/workload.py`` schedule through the cluster and collects
+TTFT / E2E / queue-wait percentiles, per-replica utilization and SLA
+attainment — no wall-clock anywhere, so runs are exactly reproducible.
+
+Replicas share one set of jitted step functions (same config, cache
+length and backend => identical traces), so an N-replica cluster
+compiles once, not N times. Outputs are bit-identical across routing
+policies when requests carry sampler seeds: prefix-extend logits match
+full-prefill logits bitwise (tests/test_cluster.py proves parity).
+
+The cluster is interface-compatible with the single engine where the
+serving pipeline needs it (``register_prefix`` / ``prefixes`` /
+``open_session`` / ``step`` / ``run_until_done`` /
+``throughput_stats``), so ``GeckOptPipeline(engine=cluster)`` works
+unchanged — sessions get replica affinity by their intent prefix.
+"""
+from __future__ import annotations
+
+import hashlib
+import heapq
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.engine import EngineSession, InferenceEngine, Request
+from repro.serving.sampling import SamplerConfig
+from repro.serving.workload import WorkloadRequest
+
+ROUTER_POLICIES = ("round_robin", "least_loaded", "intent_affinity")
+
+
+def rendezvous_hash(key: str, indices) -> int:
+    """Highest-random-weight (rendezvous) placement of ``key`` over the
+    replica ``indices``. Deterministic across processes (sha256, not the
+    salted builtin hash) and stable under replica-set growth: adding a
+    replica only remaps the keys the new replica wins."""
+    return max(indices, key=lambda i: int.from_bytes(
+        hashlib.sha256(f"{key}|{i}".encode()).digest()[:8], "big"))
+
+
+@dataclass(frozen=True)
+class ReplicaView:
+    """Router-visible snapshot of one replica's occupancy."""
+    index: int
+    busy_slots: int
+    queue_depth: int
+    holds_prefix: bool = False
+
+    @property
+    def load(self) -> int:
+        return self.busy_slots + self.queue_depth
+
+
+def _least_loaded(views: Sequence[ReplicaView]) -> int:
+    return min(views, key=lambda v: (v.load, v.index)).index
+
+
+class Router:
+    name = "base"
+
+    def select(self, views: Sequence[ReplicaView],
+               prefix_key: Optional[str] = None) -> int:
+        raise NotImplementedError
+
+    def reset(self):
+        """Drop routing state (the cluster's reset() calls this)."""
+
+
+class RoundRobinRouter(Router):
+    name = "round_robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def select(self, views, prefix_key=None) -> int:
+        i = views[self._next % len(views)].index
+        self._next += 1
+        return i
+
+    def reset(self):
+        self._next = 0
+
+
+class LeastLoadedRouter(Router):
+    name = "least_loaded"
+
+    def select(self, views, prefix_key=None) -> int:
+        return _least_loaded(views)
+
+
+class IntentAffinityRouter(Router):
+    name = "intent_affinity"
+
+    def __init__(self, spill_load: Optional[int] = None):
+        # spill_load: home-replica load (busy+queued) at which keyed
+        # traffic overflows to least-loaded; None = never spill (keeps
+        # placement a pure function of the key, the parity-test mode)
+        self.spill_load = spill_load
+
+    def select(self, views, prefix_key=None) -> int:
+        if prefix_key is None:
+            return _least_loaded(views)
+        holders = [v.index for v in views if v.holds_prefix]
+        home = rendezvous_hash(prefix_key,
+                               holders or [v.index for v in views])
+        by_index = {v.index: v for v in views}
+        if (self.spill_load is not None
+                and by_index[home].load >= self.spill_load):
+            return _least_loaded(views)
+        return home
+
+
+def make_router(policy, spill_load: Optional[int] = None) -> Router:
+    if isinstance(policy, Router):
+        return policy
+    if policy == "round_robin":
+        return RoundRobinRouter()
+    if policy == "least_loaded":
+        return LeastLoadedRouter()
+    if policy == "intent_affinity":
+        return IntentAffinityRouter(spill_load=spill_load)
+    raise ValueError(f"unknown router {policy!r}; "
+                     f"choose from {ROUTER_POLICIES}")
+
+
+@dataclass
+class RequestTrace:
+    """Cluster-side lifecycle record of one routed request (ticks)."""
+    index: int                     # workload index (-1: ad-hoc submit)
+    replica: int
+    request_id: int
+    intent: Optional[str]
+    prefix_key: Optional[str]
+    arrival_tick: int
+    sla_ticks: Optional[int]
+    session_id: Optional[int]
+    turn: int
+    admit_tick: Optional[int] = None
+    finish_tick: Optional[int] = None
+    request: Optional[Request] = None   # engine object (output, reason)
+
+
+def _pct(values: List[int], q: float) -> float:
+    return float(np.percentile(np.asarray(values), q)) if values else 0.0
+
+
+@dataclass
+class ClusterStats:
+    """End-of-run metrics: request latency distributions (ticks) plus
+    per-replica engine counters and slot utilization."""
+    ticks: int
+    traces: List[RequestTrace]
+    per_replica: List[Dict]
+
+    def outputs(self) -> Dict[int, Tuple[int, ...]]:
+        """Workload index -> generated tokens (parity comparisons)."""
+        return {t.index: tuple(t.request.output) for t in self.traces
+                if t.request is not None and t.index >= 0}
+
+    def summary(self) -> Dict:
+        done = [t for t in self.traces if t.finish_tick is not None]
+        # first token lands at the end of the admit tick; +1 so a
+        # same-tick admission costs one tick, not zero
+        ttft = [t.admit_tick - t.arrival_tick + 1 for t in done]
+        e2e = [t.finish_tick - t.arrival_tick + 1 for t in done]
+        qwait = [t.admit_tick - t.arrival_tick for t in done]
+        # a deadline-carrying request still in flight at cutoff has
+        # missed its SLA by construction — count it, don't drop it
+        sla = [t.finish_tick is not None
+               and (t.finish_tick - t.arrival_tick + 1) <= t.sla_ticks
+               for t in self.traces if t.sla_ticks is not None]
+        adm = sum(r["admissions"] for r in self.per_replica)
+        hits = sum(r["prefix_hits"] for r in self.per_replica)
+        return {
+            "ticks": self.ticks,
+            "requests": len(self.traces),
+            "finished": len(done),
+            "ttft_p50": _pct(ttft, 50), "ttft_p95": _pct(ttft, 95),
+            "e2e_p50": _pct(e2e, 50), "e2e_p95": _pct(e2e, 95),
+            "queue_wait_p50": _pct(qwait, 50),
+            "queue_wait_p95": _pct(qwait, 95),
+            "prefix_hit_ratio": round(hits / max(adm, 1), 4),
+            "sla_attainment": (round(sum(sla) / len(sla), 4)
+                               if sla else 1.0),
+            "tokens_out": sum(len(t.request.output) for t in done
+                              if t.request is not None),
+            "tokens_decoded": sum(r["tokens_generated"]
+                                  for r in self.per_replica),
+            "per_replica": self.per_replica,
+        }
+
+
+class EngineCluster:
+    """N ``InferenceEngine`` replicas behind a routing policy."""
+
+    def __init__(self, cfg=None, params=None, n_replicas: int = 2, *,
+                 engines: Optional[List[InferenceEngine]] = None,
+                 router="round_robin", spill_load: Optional[int] = None,
+                 max_batch: Optional[int] = None,
+                 cache_len: Optional[int] = None,
+                 seed: Optional[int] = None,
+                 backend: Optional[str] = None):
+        if engines is not None:
+            # prebuilt replicas keep their own configuration; sizing
+            # kwargs would be silently dropped, so refuse them
+            if any(v is not None for v in (cfg, params, max_batch,
+                                           cache_len, seed, backend)):
+                raise ValueError(
+                    "engines= is mutually exclusive with cfg/params/"
+                    "max_batch/cache_len/seed/backend (prebuilt "
+                    "replicas keep their own configuration)")
+            self.replicas = list(engines)
+        else:
+            assert cfg is not None and params is not None
+            max_batch = 8 if max_batch is None else max_batch
+            cache_len = 512 if cache_len is None else cache_len
+            seed = 0 if seed is None else seed
+            self.replicas = []
+            for i in range(n_replicas):
+                e = InferenceEngine(cfg, params, max_batch=max_batch,
+                                    cache_len=cache_len, seed=seed + i,
+                                    backend=backend)
+                if self.replicas:
+                    # identical (cfg, cache_len, backend) closures =>
+                    # replicas share one jit cache: compile once, not N×
+                    e0 = self.replicas[0]
+                    e._prefill, e._decode, e._extend = \
+                        e0._prefill, e0._decode, e0._extend
+                self.replicas.append(e)
+        self.router = make_router(router, spill_load=spill_load)
+        self.backend = self.replicas[0].backend
+        self.tick = 0
+        self.traces: Dict[Tuple[int, int], RequestTrace] = {}
+        self._next_session = 0
+        self._prefix_home: Dict[str, int] = {}
+        self._util_ticks = [0] * len(self.replicas)
+        self._finished_traces: List[RequestTrace] = []
+
+    def reset(self, seed: Optional[int] = None):
+        """Recycle the whole cluster between workloads: reset every
+        replica (slots, queues, stats, prefix caches — jit caches are
+        kept, so it serves warm), zero the tick clock, drop traces and
+        routing state. Prefixes must be re-registered afterwards."""
+        for i, e in enumerate(self.replicas):
+            e.reset(None if seed is None else seed + i)
+        self.router.reset()
+        self.tick = 0
+        self.traces = {}
+        self._next_session = 0
+        self._prefix_home = {}
+        self._util_ticks = [0] * len(self.replicas)
+        self._finished_traces = []
+
+    # ----------------------------------------------------- prefixes ----
+    @property
+    def prefixes(self) -> Dict[str, int]:
+        """Registered prefix key -> home replica index (``in``-compatible
+        with the single engine's ``prefixes`` dict)."""
+        return dict(self._prefix_home)
+
+    def register_prefix(self, key: str, prefix_text_or_ids,
+                        replicate: bool = False) -> int:
+        """Prefill the shared prefix on its rendezvous home replica (or
+        on every replica with ``replicate=True`` — which erases the
+        affinity advantage but serves hot intents from all replicas).
+        Returns the prefix length in tokens."""
+        home = rendezvous_hash(key, range(len(self.replicas)))
+        self._prefix_home[key] = home
+        if replicate:
+            return max(e.register_prefix(key, prefix_text_or_ids)
+                       for e in self.replicas)
+        return self.replicas[home].register_prefix(key,
+                                                   prefix_text_or_ids)
+
+    # ------------------------------------------------------ routing ----
+    def _views(self, prefix_key: Optional[str] = None
+               ) -> List[ReplicaView]:
+        return [ReplicaView(i, e.busy_slots(), e.queue_depth(),
+                            holds_prefix=(prefix_key is not None
+                                          and prefix_key in e.prefixes))
+                for i, e in enumerate(self.replicas)]
+
+    def route(self, prefix_key: Optional[str] = None) -> int:
+        return self.router.select(self._views(prefix_key), prefix_key)
+
+    def submit(self, prompt, max_new_tokens: int = 32,
+               sampler: SamplerConfig = SamplerConfig(),
+               prefix_key: Optional[str] = None,
+               session_id: Optional[int] = None, *,
+               intent: Optional[str] = None,
+               sla_ticks: Optional[int] = None,
+               index: int = -1, turn: int = 0) -> Tuple[int, int]:
+        """Route one request; returns (replica index, request id)."""
+        r = self.route(prefix_key)
+        rid = self.replicas[r].add_request(
+            prompt, max_new_tokens, sampler, prefix_key=prefix_key,
+            session_id=session_id)
+        self.traces[(r, rid)] = RequestTrace(
+            index=index, replica=r, request_id=rid, intent=intent,
+            prefix_key=prefix_key, arrival_tick=self.tick,
+            sla_ticks=sla_ticks, session_id=session_id, turn=turn)
+        return r, rid
+
+    def open_session(self, prefix_key: Optional[str] = None
+                     ) -> EngineSession:
+        """Pin a conversation to one replica (chosen by the router, so
+        an intent-keyed session lands on its prefix's home replica).
+        Session ids are cluster-unique: replicas' engine-local request
+        ids collide, so ``EngineSession.collect`` disambiguates by
+        session id."""
+        sid = self._next_session
+        self._next_session += 1
+        return self.replicas[self.route(prefix_key)].open_session(
+            prefix_key, session_id=sid)
+
+    # ------------------------------------------------------ stepping ----
+    def step(self) -> List[Request]:
+        """One cluster tick: every replica admits + decodes once.
+        Returns newly finished requests across all replicas."""
+        finished: List[Request] = []
+        self._finished_traces = []
+        for i, e in enumerate(self.replicas):
+            done = e.step()
+            # slots active during this tick's decode = still occupied
+            # after the step + finishers that actually held a slot.
+            # Terminal-at-admission requests (len(output) == 1) never
+            # did — a slot finisher always has its admission token plus
+            # >= 1 decoded token
+            decoded = sum(1 for r in done if len(r.output) > 1)
+            self._util_ticks[i] += e.busy_slots() + decoded
+            for req in done:
+                t = self.traces.get((i, req.request_id))
+                if t is not None:
+                    if t.admit_tick is None:
+                        t.admit_tick = self.tick
+                    t.finish_tick = self.tick
+                    t.request = req
+                    self._finished_traces.append(t)
+            for s in e.slots:
+                if s is not None:
+                    t = self.traces.get((i, s.request_id))
+                    if t is not None and t.admit_tick is None:
+                        t.admit_tick = self.tick
+            finished.extend(done)
+        self.tick += 1
+        return finished
+
+    def is_idle(self) -> bool:
+        return all(e.is_idle() for e in self.replicas)
+
+    def run_until_done(self, max_iters: int = 10_000) -> List[Request]:
+        out: List[Request] = []
+        it = 0
+        while not self.is_idle() and it < max_iters:
+            out.extend(self.step())
+            it += 1
+        return out
+
+    # ----------------------------------------------------- workloads ----
+    def run_workload(self, requests: Sequence[WorkloadRequest],
+                     max_ticks: int = 100_000) -> ClusterStats:
+        """Drive a synthetic workload: submit turn-0 requests at their
+        arrival ticks, release follow-up turns ``turn_gap`` ticks after
+        the previous turn of their session finishes, step until drained.
+
+        Requires a fresh cluster clock (stats and traces are cumulative;
+        ``reset()`` — then re-register prefixes — between workloads)."""
+        if self.tick != 0 or self.traces:
+            raise RuntimeError(
+                "run_workload on a used cluster would mix runs in "
+                "ClusterStats; call cluster.reset() (and re-register "
+                "prefixes) between workloads")
+        openers = deque(sorted((w for w in requests if w.turn == 0),
+                               key=lambda w: (w.arrival_tick, w.index)))
+        followups = {(w.session_id, w.turn): w
+                     for w in requests if w.turn > 0}
+        ready: List[Tuple[int, int, WorkloadRequest]] = []   # heap
+
+        def _submit(w: WorkloadRequest):
+            self.submit(w.prompt, w.max_new_tokens,
+                        SamplerConfig(temperature=w.temperature,
+                                      seed=w.sampler_seed),
+                        prefix_key=w.prefix_key,
+                        session_id=w.session_id, intent=w.intent,
+                        sla_ticks=w.sla_ticks, index=w.index,
+                        turn=w.turn)
+
+        while ((openers or ready or followups or not self.is_idle())
+               and self.tick < max_ticks):
+            while openers and openers[0].arrival_tick <= self.tick:
+                _submit(openers.popleft())
+            while ready and ready[0][0] <= self.tick:
+                _, _, w = heapq.heappop(ready)
+                _submit(w)
+            if (followups and not openers and not ready
+                    and self.is_idle()):
+                # nothing in flight can ever release these turns — fail
+                # fast instead of spinning max_ticks no-op iterations
+                raise ValueError(
+                    "workload has follow-up turns whose predecessor "
+                    f"turn never runs: {sorted(followups)}")
+            self.step()
+            for t in self._finished_traces:
+                if t.session_id is None:
+                    continue
+                nxt = followups.pop((t.session_id, t.turn + 1), None)
+                if nxt is not None:
+                    heapq.heappush(ready, (t.finish_tick
+                                           + nxt.arrival_tick,
+                                           nxt.index, nxt))
+        # a max_ticks cutoff can leave requests never submitted (late
+        # openers, unreleased follow-up turns): record them as traces
+        # with no admit/finish so `requests` and sla_attainment still
+        # account for the whole workload (they count as SLA misses)
+        leftovers = (list(openers) + [w for _, _, w in ready]
+                     + list(followups.values()))
+        for w in leftovers:
+            self.traces[(-1, w.index)] = RequestTrace(
+                index=w.index, replica=-1, request_id=-1,
+                intent=w.intent, prefix_key=w.prefix_key,
+                arrival_tick=(w.arrival_tick if w.turn == 0
+                              else self.tick),
+                sla_ticks=w.sla_ticks, session_id=w.session_id,
+                turn=w.turn)
+        per_replica = [
+            dict(e.stats, replica=i,
+                 hit_ratio=round(e.stats["prefix_hits"]
+                                 / max(e.stats["admissions"], 1), 4),
+                 utilization=round(self._util_ticks[i]
+                                   / max(self.tick * e.max_batch, 1), 4))
+            for i, e in enumerate(self.replicas)]
+        return ClusterStats(ticks=self.tick,
+                            traces=sorted(self.traces.values(),
+                                          key=lambda t: t.index),
+                            per_replica=per_replica)
+
+    # -------------------------------------------------------- stats ----
+    def throughput_stats(self) -> Dict:
+        """Engine-stat aggregate (single-engine-compatible keys) plus a
+        ``per_replica`` breakdown."""
+        keys = self.replicas[0].stats.keys()
+        agg: Dict = {k: sum(e.stats[k] for e in self.replicas)
+                     for k in keys}
+        agg["per_replica"] = [dict(e.stats, replica=i)
+                              for i, e in enumerate(self.replicas)]
+        return agg

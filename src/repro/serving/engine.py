@@ -33,8 +33,9 @@ DESIGN.md §Kernel backends has the selection rules and parity contract.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +59,7 @@ class Request:
     # filled by the engine:
     output: List[int] = field(default_factory=list)
     done: bool = False
+    finish_reason: Optional[str] = None   # "eos"|"max_new_tokens"|"cache_len"
     enqueue_t: float = 0.0
     first_token_t: float = 0.0
     finish_t: float = 0.0
@@ -95,17 +97,21 @@ class InferenceEngine:
         self.cache_len = cache_len
         # resolve once so every jitted step traces one fixed backend
         self.backend = get_backend(backend).name
+        self.seed = seed
         self.rng = jax.random.PRNGKey(seed)
         self.cache = init_cache(cfg, max_batch, cache_len)
         self.cache["pos"] = jnp.zeros((max_batch,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self.queue: List[Request] = []
+        # deque: admission pops the head once per free slot; a list's
+        # pop(0) is O(n) and goes quadratic under cluster-scale queues
+        self.queue: Deque[Request] = deque()
         self.prefixes: Dict[str, CachedPrefix] = {}
         self._next_id = 0
         self._next_session = 0
         self.stats = {"decode_steps": 0, "prefills": 0,
                       "tokens_generated": 0, "prefix_hits": 0,
-                      "prefix_tokens_saved": 0}
+                      "prefix_tokens_saved": 0, "admissions": 0,
+                      "prefix_registrations": 0}
 
         be = self.backend
         self._prefill = jax.jit(
@@ -142,6 +148,42 @@ class InferenceEngine:
         self.queue.append(req)
         return req.request_id
 
+    # ----------------------------------------------- load introspection ----
+    # (the cluster router reads these to place requests; serving/cluster.py)
+    def busy_slots(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def free_slot_count(self) -> int:
+        return self.max_batch - self.busy_slots()
+
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def load(self) -> int:
+        """In-flight work: occupied slots plus queued requests."""
+        return self.busy_slots() + len(self.queue)
+
+    def is_idle(self) -> bool:
+        return not self.queue and all(s is None for s in self.slots)
+
+    def reset(self, seed: Optional[int] = None):
+        """Return the engine to its just-constructed state (drain and
+        recycle a cluster replica between workloads). Cache storage is
+        reused — stale rows are masked by the zeroed ``pos`` vector and
+        overwritten at the next admission; jitted step functions are
+        kept, so a reset engine serves warm."""
+        if seed is not None:
+            self.seed = seed
+        self.rng = jax.random.PRNGKey(self.seed)
+        self.cache["pos"] = jnp.zeros((self.max_batch,), jnp.int32)
+        self.slots = [None] * self.max_batch
+        self.queue.clear()
+        self.prefixes.clear()
+        self._next_id = 0
+        self._next_session = 0
+        self.stats = {k: 0 for k in self.stats}
+        self._last_tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
+
     # -------------------------------------------------- prefix caching ----
     def register_prefix(self, key: str, prefix_text_or_ids) -> int:
         """Prefill a shared prompt prefix ONCE and cache the result.
@@ -164,6 +206,7 @@ class InferenceEngine:
         prompt = jnp.asarray(head, jnp.int32)[None, :]
         logits, cache = self._prefill(self.params, {"tokens": prompt})
         self.stats["prefills"] += 1
+        self.stats["prefix_registrations"] += 1
         cache = dict(cache)
         cache["pos"] = jnp.asarray(len(head), jnp.int32)
         logits, cache = self._decode_through(logits, cache,
@@ -219,21 +262,40 @@ class InferenceEngine:
         return self._decode_through(pref.logits, cache, suffix)
 
     # ------------------------------------------------------- sessions ----
-    def open_session(self, prefix_key: Optional[str] = None
-                     ) -> "EngineSession":
-        sid = self._next_session
-        self._next_session += 1
-        return EngineSession(self, sid, prefix_key)
+    def open_session(self, prefix_key: Optional[str] = None,
+                     session_id: Optional[int] = None) -> "EngineSession":
+        """``session_id`` defaults to an engine-local counter; a cluster
+        passes its own cluster-unique ids so sessions on different
+        replicas never collide (request ids are engine-local)."""
+        if session_id is None:
+            session_id = self._next_session
+            self._next_session += 1
+        return EngineSession(self, session_id, prefix_key)
 
     # ---------------------------------------------------- scheduling ----
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
-    def _admit(self):
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.pop(0)
+    def _request_key(self, req: Request, engine_key):
+        """Sampling key for the request's next token. Engine-stream by
+        default (``engine_key`` was split off ``self.rng`` either way,
+        so seeded requests never perturb their neighbours' streams);
+        per-request fold_in stream when the sampler carries a seed."""
+        if req.sampler.seed is None:
+            return engine_key
+        return jax.random.fold_in(jax.random.PRNGKey(req.sampler.seed),
+                                  len(req.output))
+
+    def _admit(self) -> List[Request]:
+        """Prefill queued requests into free slots; returns the ones
+        whose admission token was already terminal (they never occupy a
+        slot — the slot stays open for the next queued request)."""
+        finished: List[Request] = []
+        free = deque(self._free_slots())
+        while free and self.queue:
+            slot = free[0]
+            req = self.queue.popleft()
+            self.stats["admissions"] += 1
             pref = (self.prefixes.get(req.prefix_key)
                     if req.prefix_key else None)
             if pref is not None and len(req.prompt) > len(pref.ids) and \
@@ -250,32 +312,46 @@ class InferenceEngine:
                 self.stats["prefills"] += 1
                 cache1 = dict(cache1)
             self.rng, k = jax.random.split(self.rng)
-            tok = sample(logits, k, req.sampler)
-            req.output.append(int(tok[0]))
+            tok = int(sample(logits, self._request_key(req, k),
+                             req.sampler)[0])
+            req.output.append(tok)
             req.first_token_t = time.time()
+            if tok == SPECIALS["<eos>"] or \
+                    len(req.output) >= req.max_new_tokens:
+                # terminal at admission: an <eos> first token, or a
+                # max_new_tokens=1 budget — never decode past it
+                req.done = True
+                req.finish_reason = ("eos" if tok == SPECIALS["<eos>"]
+                                     else "max_new_tokens")
+                req.finish_t = time.time()
+                finished.append(req)
+                continue
+            free.popleft()
             self.cache = _insert_slot(self.cache, cache1, slot)
             self.cache["pos"] = self.cache["pos"].at[slot].set(
                 len(req.prompt))
             self.slots[slot] = req
-            self._last_tokens = self._last_tokens.at[slot, 0].set(tok[0])
+            self._last_tokens = self._last_tokens.at[slot, 0].set(tok)
+        return finished
 
     def step(self) -> List[Request]:
         """One engine iteration: admit from queue, decode one token for
-        every active slot. Returns newly finished requests."""
-        self._admit()
+        every active slot. Returns newly finished requests (including
+        any that terminated on their admission token)."""
+        finished = self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
-        finished: List[Request] = []
         if not active:
             return finished
         logits, self.cache = self._decode(self.params, self.cache,
                                           {"tokens": self._last_tokens})
         self.stats["decode_steps"] += 1
-        self.rng, k = jax.random.split(self.rng)
-        # per-slot samplers may differ; sample with the pool max config
+        # per-slot sampling: each slot draws its own engine-stream key,
+        # unless the request carries a per-request seed (_request_key)
         for i in active:
             req = self.slots[i]
             self.rng, ki = jax.random.split(self.rng)
-            tok = int(sample(logits[i:i + 1], ki, req.sampler)[0])
+            tok = int(sample(logits[i:i + 1], self._request_key(req, ki),
+                             req.sampler)[0])
             req.output.append(tok)
             self.stats["tokens_generated"] += 1
             self._last_tokens = self._last_tokens.at[i, 0].set(tok)
@@ -283,6 +359,9 @@ class InferenceEngine:
             hit_len = int(self.cache["pos"][i]) + 1 >= self.cache_len - 1
             if tok == SPECIALS["<eos>"] or hit_cap or hit_len:
                 req.done = True
+                req.finish_reason = ("eos" if tok == SPECIALS["<eos>"]
+                                     else "max_new_tokens" if hit_cap
+                                     else "cache_len")
                 req.finish_t = time.time()
                 finished.append(req)
                 self.slots[i] = None
@@ -327,8 +406,11 @@ class EngineSession:
         return rid
 
     def collect(self, finished: List[Request]) -> List[Request]:
-        """Claim this session's turns from an engine ``step`` result."""
-        mine = [r for r in finished if r.request_id in self.pending]
+        """Claim this session's turns from an engine ``step`` result.
+        Matches on (session_id, request_id): a cluster merges finished
+        lists from many replicas, and request ids are only engine-local."""
+        mine = [r for r in finished if r.session_id == self.session_id
+                and r.request_id in self.pending]
         for r in mine:
             self.pending.remove(r.request_id)
             self.turns.append(r)

@@ -30,6 +30,13 @@ prefix (the gated system prompt + catalog, see
 once per intent and reuses across all sessions via its prompt-prefix
 cache — examples/serve_pipeline.py and benchmarks/pipeline_bench.py
 drive this path.
+
+``engine`` may equally be a multi-replica ``EngineCluster``
+(serving/cluster.py): the cluster exposes the same ``register_prefix``
+/ ``prefixes`` / ``open_session`` / ``step`` / ``run_until_done``
+surface, and its router pins every session to its intent prefix's home
+replica — examples/serve_pipeline.py ``--replicas N --router
+intent_affinity`` serves the pipeline on a fleet.
 """
 from __future__ import annotations
 
@@ -63,6 +70,7 @@ class PipelineStats:
     engine_turns: int = 0
 
     engine_backend: str = ""     # kernel backend of the mirrored engine
+    engine_replicas: int = 0     # 1 = single engine, N = EngineCluster
 
     def summary(self) -> Dict[str, float]:
         sizes = self.gate_batch_sizes or [0]
@@ -72,7 +80,8 @@ class PipelineStats:
                 "ticks": self.ticks,
                 "peak_concurrent": self.peak_concurrent,
                 "engine_turns": self.engine_turns,
-                "engine_backend": self.engine_backend}
+                "engine_backend": self.engine_backend,
+                "engine_replicas": self.engine_replicas}
 
 
 class GeckOptPipeline:
@@ -95,6 +104,9 @@ class GeckOptPipeline:
             # surfaced here so pipeline summaries record which backend
             # served the run end-to-end
             self.stats.engine_backend = getattr(engine, "backend", "")
+            # an EngineCluster carries .replicas; a bare engine is 1
+            self.stats.engine_replicas = len(
+                getattr(engine, "replicas", ())) or 1
         self._engine_sessions = []
 
     # ---------------------------------------------------------- stages ----

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -11,6 +12,13 @@ import jax.numpy as jnp
 class SamplerConfig:
     temperature: float = 0.0      # 0 => greedy
     top_k: int = 0                # 0 => no top-k truncation
+    # Per-request sampling stream. None (default): the engine draws from
+    # its own rng, so tokens depend on engine seed and admission order.
+    # An int decouples the request from its engine: token i is sampled
+    # with fold_in(PRNGKey(seed), i), making outputs a pure function of
+    # (prompt, seed) — the property the multi-replica cluster relies on
+    # for exact token parity across routing policies (serving/cluster.py).
+    seed: Optional[int] = None
 
 
 def sample(logits, rng, cfg: SamplerConfig):

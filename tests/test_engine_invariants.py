@@ -1,0 +1,234 @@
+"""Property-style invariants of the continuous-batching engine.
+
+The cluster layer (serving/cluster.py) multiplies every engine bug by N
+replicas, so the core scheduling invariants get their own test layer:
+slot recycling, finish-reason classification, admission accounting,
+deque queue semantics and bit-reproducibility.
+"""
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.model import init_params
+from repro.serving.engine import InferenceEngine
+from repro.serving.sampling import SamplerConfig
+from repro.serving.tokenizer import SPECIALS
+
+
+@pytest.fixture(scope="module")
+def planner():
+    cfg = get_smoke_config("planner-proxy-100m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def base_engine(planner):
+    """Compile the jitted steps once for cache_len=128."""
+    cfg, params = planner
+    return InferenceEngine(cfg, params, max_batch=2, cache_len=128)
+
+
+def make_engine(planner, base=None, **kw):
+    """Fresh engine; shares the base engine's jitted step functions when
+    the cache_len matches (the closures bind cfg/cache_len/backend)."""
+    cfg, params = planner
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("cache_len", 128)
+    eng = InferenceEngine(cfg, params, **kw)
+    if base is not None and kw["cache_len"] == base.cache_len:
+        eng._prefill, eng._decode, eng._extend = \
+            base._prefill, base._decode, base._extend
+    return eng
+
+
+# ------------------------------------------------------ queue semantics ----
+
+def test_queue_is_deque_with_fifo_admission(planner, base_engine):
+    """The O(n) list.pop(0) queue is gone: admission pops the deque head
+    in arrival order."""
+    eng = make_engine(planner, base_engine)
+    assert isinstance(eng.queue, deque)
+    rids = [eng.add_request(f"queued request number {i}",
+                            max_new_tokens=6) for i in range(5)]
+    eng.step()               # admits exactly max_batch=2, FIFO
+    in_slots = sorted(s.request_id for s in eng.slots if s is not None)
+    assert in_slots == rids[:2]
+    assert [r.request_id for r in eng.queue] == rids[2:]
+    done = eng.run_until_done()
+    assert sorted(r.request_id for r in done) == rids
+
+
+def test_load_accessors(planner, base_engine):
+    """The router-facing introspection surface: busy + free == max_batch
+    and load == busy + queued, live through a request's lifecycle."""
+    eng = make_engine(planner, base_engine)
+    assert eng.is_idle() and eng.load() == 0
+    for i in range(3):
+        eng.add_request(f"load accessor probe {i}", max_new_tokens=4)
+    assert eng.queue_depth() == 3 and eng.load() == 3
+    eng.step()                       # admits 2 of 3
+    assert eng.busy_slots() == 2 and eng.free_slot_count() == 0
+    assert eng.queue_depth() == 1 and eng.load() == 3
+    assert not eng.is_idle()
+    eng.run_until_done()
+    assert eng.is_idle() and eng.busy_slots() == 0
+    assert eng.free_slot_count() == eng.max_batch
+
+
+# -------------------------------------------------------- slot recycling ----
+
+def test_slot_recycling_never_leaks(planner, base_engine):
+    """Freed slots come back with pos reset; a recycled slot serves its
+    next tenant exactly as a fresh engine would (stale cache rows are
+    overwritten / masked, never read)."""
+    eng = make_engine(planner, base_engine)
+    prompts = [f"recycled slot request {i} about maps" for i in range(6)]
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=3,
+                        sampler=SamplerConfig(temperature=0.0))
+    done = {r.request_id: r for r in eng.run_until_done()}
+    assert len(done) == 6                      # 3 waves over 2 slots
+    assert all(s is None for s in eng.slots)
+    assert jnp.all(eng.cache["pos"] == 0)      # freed slots reset
+    # the LAST wave ran in twice-recycled slots; its outputs must equal
+    # a fresh engine serving the same prompts alone
+    fresh = make_engine(planner, base_engine)
+    for p in prompts[4:]:
+        fresh.add_request(p, max_new_tokens=3,
+                          sampler=SamplerConfig(temperature=0.0))
+    fresh_done = {tuple(r.prompt): r.output
+                  for r in fresh.run_until_done()}
+    assert len(fresh_done) == 2
+    matched = 0
+    for r in done.values():
+        if tuple(r.prompt) in fresh_done:
+            assert r.output == fresh_done[tuple(r.prompt)]
+            matched += 1
+    assert matched == 2
+
+
+# --------------------------------------------------------- finish reason ----
+
+def test_finish_reason_exactly_one(planner, base_engine):
+    """Every finished request records exactly one terminal cause, and
+    the recorded cause is consistent with its output."""
+    eng = make_engine(planner, base_engine)
+    eng.add_request("finish by budget please", max_new_tokens=3)
+    eng.add_request("another budget bounded request", max_new_tokens=5)
+    tiny = make_engine(planner, cache_len=48)   # force cache exhaustion
+    tiny.add_request("short prompt long generation", max_new_tokens=512)
+    done = eng.run_until_done() + tiny.run_until_done()
+    assert len(done) == 3
+    for r in done:
+        assert r.done and r.finish_reason in ("eos", "max_new_tokens",
+                                              "cache_len")
+        if r.finish_reason == "eos":
+            assert r.output[-1] == SPECIALS["<eos>"]
+        elif r.finish_reason == "max_new_tokens":
+            assert len(r.output) == r.max_new_tokens
+        else:
+            assert len(r.output) < r.max_new_tokens
+    assert done[2].finish_reason == "cache_len"
+
+
+def test_admission_token_can_be_terminal(planner, base_engine):
+    """A max_new_tokens=1 request finishes ON its admission token —
+    exactly one output token, never decoded past, and the slot it was
+    prefilled into is immediately available to the next queued request."""
+    eng = make_engine(planner, base_engine)
+    rids = [eng.add_request(f"one token budget request {i}",
+                            max_new_tokens=1) for i in range(3)]
+    done = eng.step()
+    # 2 slots, but terminal admissions recycle the slot within _admit:
+    # all three one-token requests finish in the first step
+    assert sorted(r.request_id for r in done) == rids
+    for r in done:
+        assert len(r.output) == 1
+        assert r.finish_reason in ("eos", "max_new_tokens")
+    assert eng.is_idle() and eng.stats["decode_steps"] == 0
+    assert eng.stats["admissions"] == 3
+
+
+# -------------------------------------------------- admission accounting ----
+
+def test_prefix_hits_plus_prefills_equals_admissions(planner, base_engine):
+    """Every admission is served by exactly one of: a prefix-cache hit
+    or a full prefill. register_prefix's own prefill is counted in
+    ``prefills`` AND ``prefix_registrations``, so:
+    admissions == prefix_hits + prefills - prefix_registrations."""
+    prefix = "shared system prefix words here"
+
+    def check(eng):
+        st = eng.stats
+        assert (st["admissions"]
+                == st["prefix_hits"] + st["prefills"]
+                - st["prefix_registrations"]), st
+        return st
+
+    eng = make_engine(planner, base_engine)
+    for i in range(4):
+        eng.add_request(f"no prefix request {i}", max_new_tokens=2)
+    eng.run_until_done()
+    st = check(eng)
+    assert st["admissions"] == 4 and st["prefix_hits"] == 0
+
+    eng = make_engine(planner, base_engine)
+    eng.register_prefix("p", prefix)
+    for i in range(3):
+        eng.add_request(f"{prefix} query {i}", max_new_tokens=2,
+                        prefix_key="p")
+    eng.add_request("entirely different prompt", max_new_tokens=2,
+                    prefix_key="p")           # miss -> full prefill
+    eng.run_until_done()
+    st = check(eng)
+    assert st["prefix_registrations"] == 1
+    assert st["prefix_hits"] == 3 and st["admissions"] == 4
+
+
+# ------------------------------------------------------- reproducibility ----
+
+def test_run_until_done_bit_reproducible(planner, base_engine):
+    """Two engines, same seed, same requests => identical tokens, stats
+    and finish reasons (stochastic sampling included)."""
+
+    def run(seed):
+        eng = make_engine(planner, base_engine, seed=seed)
+        for i in range(5):
+            eng.add_request(f"reproducibility probe {i} over the bay",
+                            max_new_tokens=4,
+                            sampler=SamplerConfig(temperature=0.7,
+                                                  top_k=40))
+        done = sorted(eng.run_until_done(), key=lambda r: r.request_id)
+        return ([r.output for r in done],
+                [r.finish_reason for r in done], dict(eng.stats))
+
+    assert run(11) == run(11)
+    # different engine seed => different sampling stream (sanity that
+    # the assertion above is not vacuous)
+    assert run(11)[0] != run(12)[0]
+
+
+def test_seeded_sampler_decouples_from_engine_stream(planner, base_engine):
+    """With per-request sampler seeds, outputs are independent of the
+    ENGINE seed and of co-tenant traffic — the property the cluster's
+    cross-policy token parity rests on."""
+
+    def run(engine_seed, extra_traffic):
+        eng = make_engine(planner, base_engine, seed=engine_seed)
+        rid = eng.add_request("seeded request about harbors",
+                              max_new_tokens=5,
+                              sampler=SamplerConfig(temperature=0.9,
+                                                    seed=1234))
+        if extra_traffic:
+            eng.add_request("noisy neighbour request", max_new_tokens=5,
+                            sampler=SamplerConfig(temperature=0.9))
+        return {r.request_id: r.output
+                for r in eng.run_until_done()}[rid]
+
+    a = run(0, extra_traffic=False)
+    b = run(99, extra_traffic=True)
+    assert a == b

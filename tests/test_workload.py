@@ -1,0 +1,116 @@
+"""Synthetic traffic generator: determinism, intent mix, profiles."""
+import pytest
+
+from repro.core.intents import INTENTS
+from repro.serving.workload import (PROFILES, WorkloadConfig,
+                                    intent_prefix, make_workload,
+                                    prefix_key_for, skewed_mix,
+                                    uniform_mix, workload_intents)
+
+
+def test_same_seed_same_workload():
+    """Same config => identical request list (schedule, intents, session
+    turn order, prompts, sampler seeds) — no wall-clock randomness."""
+    cfg = WorkloadConfig(n_sessions=24, seed=7, profile="poisson",
+                         max_turns=3, temperature=0.8)
+    a = make_workload(cfg)
+    b = make_workload(cfg)
+    assert a == b                      # frozen dataclasses, field-exact
+    c = make_workload(WorkloadConfig(n_sessions=24, seed=8,
+                                     profile="poisson", max_turns=3,
+                                     temperature=0.8))
+    assert a != c
+
+
+def test_intent_mix_within_tolerance():
+    """Drawn intent frequencies track the requested distribution."""
+    mix = skewed_mix(hot="detection_analysis", hot_frac=0.6)
+    reqs = make_workload(WorkloadConfig(n_sessions=600, seed=0,
+                                        intent_mix=mix))
+    counts = workload_intents(reqs)
+    n = sum(counts.values())
+    assert n == 600
+    for intent, p in mix.items():
+        assert abs(counts.get(intent, 0) / n - p) < 0.06, (intent, counts)
+
+
+def test_uniform_mix_sums_to_one():
+    for mix in (uniform_mix(), skewed_mix(hot_frac=0.7)):
+        assert abs(sum(mix.values()) - 1.0) < 1e-9
+        assert set(mix) == set(INTENTS)
+
+
+def test_skewed_mix_bounds():
+    # hot_frac=1.0 is the degenerate all-hot workload, not an error
+    mix = skewed_mix(hot="visual_qa", hot_frac=1.0)
+    assert mix["visual_qa"] == 1.0
+    assert all(v == 0.0 for k, v in mix.items() if k != "visual_qa")
+    reqs = make_workload(WorkloadConfig(n_sessions=8, intent_mix=mix))
+    assert {w.intent for w in reqs} == {"visual_qa"}
+    for bad in (0.0, -0.1, 1.5):
+        with pytest.raises(ValueError):
+            skewed_mix(hot_frac=bad)
+    with pytest.raises(ValueError):
+        skewed_mix(hot="not_an_intent")
+    with pytest.raises(ValueError):       # < 2 intents: no cold share
+        skewed_mix(hot="visual_qa", hot_frac=0.5,
+                   intents=("visual_qa",))
+
+
+@pytest.mark.parametrize("profile", PROFILES)
+def test_arrival_schedules(profile):
+    cfg = WorkloadConfig(n_sessions=32, seed=3, profile=profile,
+                         inter_arrival=2.0, burst_size=4)
+    openers = [w for w in make_workload(cfg) if w.turn == 0]
+    ticks = [w.arrival_tick for w in openers]
+    assert ticks == sorted(ticks)
+    assert ticks[0] == 0
+    if profile == "uniform":
+        assert ticks == [2 * i for i in range(32)]
+    if profile == "bursty":
+        # bursts of burst_size share one tick, spaced to keep the rate
+        assert ticks == [(i // 4) * 8 for i in range(32)]
+    if profile == "poisson":
+        assert len(set(ticks)) > 1
+
+
+def test_unknown_profile_rejected():
+    with pytest.raises(ValueError):
+        make_workload(WorkloadConfig(profile="flashmob"))
+
+
+def test_sessions_share_intent_and_order_turns():
+    reqs = make_workload(WorkloadConfig(n_sessions=20, seed=1,
+                                        max_turns=4, turn_gap=2))
+    by_session = {}
+    for w in reqs:
+        by_session.setdefault(w.session_id, []).append(w)
+    assert any(len(v) > 1 for v in by_session.values())
+    for sid, turns in by_session.items():
+        assert [w.turn for w in turns] == list(range(len(turns)))
+        assert len({w.intent for w in turns}) == 1
+        assert all(w.n_turns == len(turns) for w in turns)
+        for w in turns[1:]:
+            assert w.arrival_tick == 2       # the turn gap, not absolute
+    # workload indices are positional
+    assert [w.index for w in reqs] == list(range(len(reqs)))
+
+
+def test_prompts_carry_intent_prefix():
+    reqs = make_workload(WorkloadConfig(n_sessions=16, seed=0))
+    for w in reqs:
+        assert w.prompt.startswith(intent_prefix(w.intent))
+        assert len(w.prompt) > len(intent_prefix(w.intent))
+        assert w.prefix_key == prefix_key_for(w.intent)
+        assert w.sla_ticks >= 64 and w.max_new_tokens == 4
+    bare = make_workload(WorkloadConfig(n_sessions=4, use_prefix=False))
+    assert all(w.prefix_key is None for w in bare)
+
+
+def test_sampler_seeds_unique_and_deterministic():
+    reqs = make_workload(WorkloadConfig(n_sessions=64, seed=5))
+    seeds = [w.sampler_seed for w in reqs]
+    assert len(set(seeds)) == len(seeds)
+    assert seeds == [w.sampler_seed
+                     for w in make_workload(WorkloadConfig(n_sessions=64,
+                                                           seed=5))]
