@@ -1,0 +1,219 @@
+"""Paged-vs-dense KV-cache benchmark: concurrency and memory at a fixed
+KV budget.
+
+The dense engine reserves a full ``cache_len`` slab per slot and copies
+the shared intent prefix into every admission; the paged engine
+(serving/kvpool.py) spends the SAME physical row budget as refcounted
+blocks, CoW-shares the pinned prefix across every slot and admits by
+free blocks, not by worst-case preallocation. This bench quantifies the
+trade on one hot-intent workload (every session = shared prefix + a
+private suffix, seeded samplers at T=0.8):
+
+  concurrency@budget  dense and paged at the SAME physical KV rows;
+                      paged gets 4x the slots and sustains them because
+                      sessions only own their suffix/decode blocks —
+                      ``peak_concurrent`` is the headline column;
+  memory@slots        dense and paged at the SAME slot count; paged
+                      peak KV bytes drop by the shared-prefix factor
+                      (``kv_bytes_peak``, ``shared_peak`` blocks);
+  tokens/step         decode throughput per engine iteration (one step
+                      decodes every busy slot — more concurrent
+                      sessions at equal memory = more tokens per step);
+  tokens_equal        dense and paged produce bitwise-identical tokens
+                      (per-request sampler seeds make outputs placement-
+                      independent, so this holds across slot counts —
+                      the engine parity contract, DESIGN.md §Paged KV
+                      cache).
+
+Writes results/paging_bench.{json,md}.
+
+  PYTHONPATH=src python benchmarks/paging_bench.py [--tiny]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+COLUMNS = ("scenario", "mode", "slots", "kv_rows", "peak_concurrent",
+           "ticks", "tokens_out", "tokens_per_step", "kv_bytes_peak",
+           "shared_peak", "preemptions", "tokens_equal")
+
+
+def _drive(eng, prompts, prefix_key, max_new):
+    """Serve the request list to completion; returns (outputs keyed by
+    submission index, row fragment)."""
+    from repro.serving.sampling import SamplerConfig
+    rid_to_idx = {}
+    for i, ids in enumerate(prompts):
+        rid = eng.add_request(ids, max_new_tokens=max_new,
+                              sampler=SamplerConfig(temperature=0.8,
+                                                    top_k=40,
+                                                    seed=10_000 + i),
+                              prefix_key=prefix_key)
+        rid_to_idx[rid] = i
+    done, peak, ticks = [], 0, 0
+    t0 = time.time()
+    while not eng.is_idle() and ticks < 100_000:
+        done.extend(eng.step())
+        peak = max(peak, eng.busy_slots())
+        ticks += 1
+    wall = time.time() - t0
+    st = eng.throughput_stats()
+    outputs = {rid_to_idx[r.request_id]: tuple(r.output) for r in done}
+    return outputs, {
+        "slots": eng.max_batch,
+        "peak_concurrent": peak,
+        "ticks": ticks,
+        "tokens_out": sum(len(o) for o in outputs.values()),
+        "tokens_per_step": round(st["tokens_generated"]
+                                 / max(st["decode_steps"], 1), 2),
+        "kv_bytes_peak": st["kv_bytes_peak"],
+        "kv_bytes_allocated": st["kv_bytes_allocated"],
+        "shared_peak": st["kv_blocks_shared_peak"],
+        "preemptions": st["preemptions"],
+        "prefix_hits": st["prefix_hits"],
+        "wall_s": round(wall, 2),
+    }
+
+
+def bench(tiny: bool = False):
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models.model import init_params
+    from repro.serving.engine import InferenceEngine
+
+    cfg = get_smoke_config("planner-proxy-100m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    if tiny:
+        cache_len, bs, dense_slots, paged_slots = 128, 16, 2, 6
+        n_sessions, prefix_len, suffix_len, max_new = 6, 40, 6, 4
+    else:
+        cache_len, bs, dense_slots, paged_slots = 256, 16, 4, 16
+        n_sessions, prefix_len, suffix_len, max_new = 24, 100, 8, 8
+    kv_rows = dense_slots * cache_len          # the shared budget
+    kv_blocks = kv_rows // bs
+
+    prefix = list(range(5, 5 + prefix_len))
+    prompts = [prefix + list(range(200 + suffix_len * i,
+                                   200 + suffix_len * (i + 1)))
+               for i in range(n_sessions)]
+    key = "intent:hot"
+
+    def engine(mode, slots, blocks=None):
+        kw = ({"kv_blocks": blocks, "block_size": bs}
+              if mode == "paged" else {})
+        eng = InferenceEngine(cfg, params, max_batch=slots,
+                              cache_len=cache_len, kv_mode=mode, **kw)
+        eng.register_prefix(key, prefix)
+        return eng
+
+    rows, ref_outputs = [], None
+
+    def run(scenario, mode, slots, blocks=None):
+        nonlocal ref_outputs
+        outputs, frag = _drive(engine(mode, slots, blocks), prompts,
+                               key, max_new)
+        if ref_outputs is None:
+            ref_outputs = outputs
+        rows.append({"scenario": scenario, "mode": mode,
+                     "kv_rows": (blocks * bs if blocks else
+                                 slots * cache_len),
+                     "tokens_equal": outputs == ref_outputs, **frag})
+
+    # same physical KV rows; paged converts them into 4x the slots
+    run("concurrency@budget", "dense", dense_slots)
+    run("concurrency@budget", "paged", paged_slots, kv_blocks)
+    # same slot count; paged shrinks the peak footprint
+    run("memory@slots", "dense", dense_slots)
+    run("memory@slots", "paged", dense_slots,
+        dense_slots * cache_len // bs)
+
+    by = {(r["scenario"], r["mode"]): r for r in rows}
+    ca_d = by[("concurrency@budget", "dense")]
+    ca_p = by[("concurrency@budget", "paged")]
+    ms_d = by[("memory@slots", "dense")]
+    ms_p = by[("memory@slots", "paged")]
+    meta = {
+        "tiny": tiny, "cache_len": cache_len, "block_size": bs,
+        "kv_budget_rows": kv_rows, "n_sessions": n_sessions,
+        "prefix_len": prefix_len, "suffix_len": suffix_len,
+        "max_new_tokens": max_new, "temperature": 0.8,
+        "paged_more_concurrent": (ca_p["peak_concurrent"]
+                                  > ca_d["peak_concurrent"]),
+        "paged_memory_savings": round(
+            1 - ms_p["kv_bytes_peak"] / max(ms_d["kv_bytes_peak"], 1),
+            4),
+        "tokens_identical": all(r["tokens_equal"] for r in rows),
+    }
+    if not meta["tokens_identical"]:
+        raise AssertionError(
+            "dense and paged engines diverged on the same workload — "
+            "the paged KV cache broke the bitwise parity contract")
+    return rows, meta
+
+
+def write_results(rows, meta):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    md = ["# paging_bench — paged vs dense KV cache at a fixed budget",
+          "",
+          f"{meta['n_sessions']} one-intent sessions (prefix "
+          f"{meta['prefix_len']} tok + suffix {meta['suffix_len']} tok, "
+          f"{meta['max_new_tokens']} new tokens each, seeded samplers "
+          f"at T={meta['temperature']}); budget "
+          f"{meta['kv_budget_rows']} KV rows, block_size="
+          f"{meta['block_size']}.", "",
+          "| " + " | ".join(COLUMNS) + " |",
+          "|" + "---|" * len(COLUMNS)]
+    for r in rows:
+        md.append("| " + " | ".join(str(r[c]) for c in COLUMNS) + " |")
+    md += ["",
+           f"- paged sustains more concurrent sessions at the same KV "
+           f"budget: **{meta['paged_more_concurrent']}**",
+           f"- paged peak-memory savings at equal slots: "
+           f"**{100 * meta['paged_memory_savings']:.1f}%**",
+           f"- bitwise-identical tokens in every run: "
+           f"**{meta['tokens_identical']}**",
+           "",
+           "Interpretation: at the same physical budget the dense "
+           "engine is slot-bound (every admission reserves a full "
+           "`cache_len` slab and copies the prefix into it) while the "
+           "paged engine CoW-shares the pinned prefix blocks and only "
+           "owns each session's suffix/decode blocks — so the same "
+           "rows serve several times the concurrency (`tokens/step` "
+           "scales with it), and at equal slots the peak footprint "
+           "drops by the shared-prefix factor. Identical tokens "
+           "throughout: paging moves memory, never logits."]
+    with open(os.path.join(RESULTS_DIR, "paging_bench.md"), "w") as f:
+        f.write("\n".join(md) + "\n")
+    with open(os.path.join(RESULTS_DIR, "paging_bench.json"), "w") as f:
+        json.dump({"meta": meta, "rows": rows}, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke config (small pool, few sessions); "
+                         "skips writing results/")
+    args = ap.parse_args()
+    rows, meta = bench(tiny=args.tiny)
+    if not args.tiny:
+        write_results(rows, meta)
+    for r in rows:
+        print(f"{r['scenario']:19s} {r['mode']:5s} slots={r['slots']:2d} "
+              f"rows={r['kv_rows']:5d} peak_conc={r['peak_concurrent']:2d} "
+              f"tok/step={r['tokens_per_step']:5.2f} "
+              f"peakB={r['kv_bytes_peak']:8d} shared={r['shared_peak']:3d} "
+              f"preempt={r['preemptions']} equal={r['tokens_equal']}")
+    print(f"paged_more_concurrent={meta['paged_more_concurrent']} "
+          f"memory_savings={meta['paged_memory_savings']:.2%} "
+          f"tokens_identical={meta['tokens_identical']}")
+    return rows, meta
+
+
+if __name__ == "__main__":
+    main()

@@ -51,6 +51,16 @@ def main():
     ap.add_argument("--router", default="intent_affinity",
                     choices=ROUTER_POLICIES,
                     help="cluster routing policy (with --replicas > 1)")
+    ap.add_argument("--kv-mode", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV-cache manager for the engine(s): dense "
+                         "slabs or the paged pool with CoW prefix "
+                         "sharing")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="paged: physical KV blocks per engine "
+                         "(default: the dense budget)")
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="paged: tokens per KV block (default: 16)")
     args = ap.parse_args()
 
     # --- the serving fleet: engine(s) + one batched gate model -----------
@@ -61,10 +71,16 @@ def main():
     if args.replicas > 1:
         engine = EngineCluster(cfg, params, args.replicas,
                                router=args.router, max_batch=4,
-                               cache_len=4096, backend=args.backend)
+                               cache_len=4096, backend=args.backend,
+                               kv_mode=args.kv_mode,
+                               kv_blocks=args.kv_blocks,
+                               block_size=args.block_size)
     else:
         engine = InferenceEngine(cfg, params, max_batch=4,
-                                 cache_len=4096, backend=args.backend)
+                                 cache_len=4096, backend=args.backend,
+                                 kv_mode=args.kv_mode,
+                                 kv_blocks=args.kv_blocks,
+                                 block_size=args.block_size)
     classifier = BatchedNeuralIntentClassifier(cfg, params)
     print(f"planner engine up: {count_params_analytic(cfg)/1e6:.1f}M "
           f"params, {args.replicas} replica(s) x 4 slots; "
@@ -101,6 +117,11 @@ def main():
           f"{es['prefix_hits']} prefix hits, "
           f"{es['prefix_tokens_saved']} prefill tokens saved, "
           f"{es['tokens_generated']} tokens decoded")
+    print(f"kv[{es['kv_mode']}]: peak {es['kv_bytes_peak'] / 2**20:.1f} "
+          f"MiB of {es['kv_bytes_allocated'] / 2**20:.1f} MiB"
+          + (f" | shared-block frac {es['kv_shared_frac']:.2f}, "
+             f"{es['preemptions']} preemptions"
+             if es["kv_mode"] == "paged" else ""))
     if args.replicas > 1:
         for r in es["per_replica"]:
             print(f"  replica {r['replica']}: {r['admissions']} turns, "

@@ -33,6 +33,7 @@ import jax
 
 from repro.kernels import ref as R
 from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode_paged import flash_decode_paged
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.mlstm_scan import mlstm_scan
 from repro.kernels.moe_router import moe_router_topk
@@ -46,6 +47,8 @@ class KernelBackend:
     All ops share the reference signatures (see kernels/ref.py):
       attention(q, k, v, *, causal, window, cap, scale, q_offset)
       decode_attention(q, k_cache, v_cache, kv_len, *, cap, scale)
+      paged_decode_attention(q, k_pages, v_pages, block_tab, kv_len, *,
+                             cap, scale)
       router_topk(logits (T,E), k) -> (weights (T,k) fp32, idx (T,k) i32)
       selective_scan(dt, x, B_, C_, A, h0) -> (y, h_last)
       mlstm_scan(q, k, v, i_pre, f_pre, state, *, scale) -> (h, state)
@@ -53,6 +56,7 @@ class KernelBackend:
     name: str
     attention: Callable
     decode_attention: Callable
+    paged_decode_attention: Callable
     router_topk: Callable
     selective_scan: Callable
     mlstm_scan: Callable
@@ -118,6 +122,7 @@ register_backend(KernelBackend(
     name="reference",
     attention=R.attention_ref,
     decode_attention=R.decode_attention_ref,
+    paged_decode_attention=R.paged_decode_attention_ref,
     router_topk=_ref_router_topk,
     selective_scan=R.selective_scan_ref,
     mlstm_scan=R.mlstm_scan_ref,
@@ -143,6 +148,13 @@ def _pl_decode_attention(q, k_cache, v_cache, kv_len, *, cap=0.0,
                         interpret=_interpret())
 
 
+def _pl_paged_decode_attention(q, k_pages, v_pages, block_tab, kv_len, *,
+                               cap=0.0, scale=0.0):
+    return flash_decode_paged(q, k_pages, v_pages, block_tab, kv_len,
+                              cap=cap, scale=scale,
+                              interpret=_interpret())
+
+
 def _pl_router_topk(logits, k: int):
     return moe_router_topk(logits, k, interpret=_interpret())
 
@@ -160,6 +172,7 @@ register_backend(KernelBackend(
     name="pallas",
     attention=_pl_attention,
     decode_attention=_pl_decode_attention,
+    paged_decode_attention=_pl_paged_decode_attention,
     router_topk=_pl_router_topk,
     selective_scan=_pl_selective_scan,
     mlstm_scan=_pl_mlstm_scan,

@@ -59,6 +59,33 @@ def decode_attention_ref(q, k_cache, v_cache, kv_len, *, cap=0.0,
     return out[:, :, 0]
 
 
+def paged_gather_kv(pages, block_tab):
+    """Materialize the logical per-sequence KV view of a paged pool.
+
+    pages: (n_blocks, Hkv, bs, hd) physical block pool (one layer);
+    block_tab: (B, max_blocks) int32 block table — entries >= n_blocks
+    are out-of-table sentinels and clamp to the last block (their rows
+    are garbage, masked away by kv_len downstream).
+    Returns (B, Hkv, max_blocks * bs, hd).
+    """
+    nb, Hkv, bs, hd = pages.shape
+    B, mb = block_tab.shape
+    view = jnp.take(pages, jnp.clip(block_tab, 0, nb - 1), axis=0)
+    return view.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, mb * bs, hd)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tab, kv_len, *,
+                               cap=0.0, scale=0.0):
+    """Decode attention against scattered KV blocks (gather oracle).
+
+    q: (B,Hq,hd); pages: (n_blocks,Hkv,bs,hd); block_tab: (B,mb) int32;
+    kv_len: (B,) valid rows per sequence. Returns (B,Hq,hd).
+    """
+    return decode_attention_ref(q, paged_gather_kv(k_pages, block_tab),
+                                paged_gather_kv(v_pages, block_tab),
+                                kv_len, cap=cap, scale=scale)
+
+
 def router_topk_ref(logits, k: int):
     """logits: (T,E) -> (weights (T,k), idx (T,k), probs (T,E))."""
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)

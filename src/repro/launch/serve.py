@@ -34,7 +34,10 @@ def serve_cluster(cfg, params, args):
                             router=args.router,
                             max_batch=args.max_batch,
                             cache_len=args.cache_len,
-                            backend=args.backend)
+                            backend=args.backend,
+                            kv_mode=args.kv_mode,
+                            kv_blocks=args.kv_blocks,
+                            block_size=args.block_size)
     mix = (skewed_mix(hot_frac=args.skew) if args.skew > 0
            else uniform_mix())
     reqs = make_workload(WorkloadConfig(
@@ -55,6 +58,15 @@ def serve_cluster(cfg, params, args):
           f"SLA {100 * s['sla_attainment']:.1f}%")
     print(f"prefix-hit ratio {s['prefix_hit_ratio']:.2f} | "
           f"{s['tokens_out']} tokens out")
+    kv_line = (f"kv[{args.kv_mode}]: peak "
+               f"{s['kv_bytes_peak'] / 2**20:.1f} MiB of "
+               f"{s['kv_bytes_allocated'] / 2**20:.1f} MiB")
+    if args.kv_mode == "paged":
+        kv_line += (f" | shared-block frac {s['kv_shared_frac']:.2f} | "
+                    f"{s['preemptions']} preemptions, "
+                    f"{s['resumes']} resumes, "
+                    f"{s['prefix_evictions']} prefix evictions")
+    print(kv_line)
     for r in s["per_replica"]:
         print(f"  replica {r['replica']}: {r['admissions']} admissions, "
               f"hit {r['hit_ratio']:.2f}, util {r['utilization']:.2f}")
@@ -73,6 +85,15 @@ def main():
     ap.add_argument("--backend", default=None,
                     choices=("reference", "pallas"),
                     help="kernel backend (default: PerfFlags.kernel_backend)")
+    ap.add_argument("--kv-mode", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV-cache manager: dense per-slot slabs or the "
+                         "paged block pool with CoW prefix sharing")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="paged: physical KV blocks (default: the dense "
+                         "budget, max_batch*cache_len/block_size)")
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="paged: tokens per KV block (default: 16)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="serve an EngineCluster of N replicas (> 1)")
     ap.add_argument("--router", default="intent_affinity",
@@ -100,7 +121,10 @@ def main():
 
     engine = InferenceEngine(cfg, params, max_batch=args.max_batch,
                              cache_len=args.cache_len,
-                             backend=args.backend)
+                             backend=args.backend,
+                             kv_mode=args.kv_mode,
+                             kv_blocks=args.kv_blocks,
+                             block_size=args.block_size)
     prompts = [
         f"Plot xview1 images around Tampa Bay with cloud cover below "
         f"{10 + i}%" for i in range(args.requests)]
@@ -115,6 +139,10 @@ def main():
     print(f"served {len(done)} requests in {dt:.2f}s | "
           f"decode steps {st['decode_steps']} | "
           f"{st['tokens_generated'] / max(dt, 1e-9):.1f} tok/s")
+    print(f"kv[{st['kv_mode']}]: peak {st['kv_bytes_peak'] / 2**20:.1f} "
+          f"MiB of {st['kv_bytes_allocated'] / 2**20:.1f} MiB allocated"
+          + (f" | {st['preemptions']} preemptions"
+             if st["kv_mode"] == "paged" else ""))
     lat = [r.finish_t - r.enqueue_t for r in done]
     ttft = [r.first_token_t - r.enqueue_t for r in done]
     print(f"p50 latency {sorted(lat)[len(lat)//2]*1000:.0f}ms | "

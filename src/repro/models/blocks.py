@@ -85,6 +85,20 @@ def block_cache_init(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
     return c
 
 
+def block_paged_cache_init(kind: str, cfg: ModelConfig, n_blocks: int,
+                           block_size: int):
+    """Zero-initialized paged page pool for one block. Paged caching
+    covers pure-attention kinds only — recurrent state (SSM/xLSTM),
+    ring buffers and cross-attention have no block-table layout."""
+    if kind not in ("full", "dense", "moe"):
+        raise NotImplementedError(
+            f"paged KV cache over {kind!r} layers (pure-attention "
+            f"stacks only)")
+    hd, Hkv = cfg.d_head, cfg.n_kv_heads
+    return {"k": jnp.zeros((n_blocks, Hkv, block_size, hd), jnp.bfloat16),
+            "v": jnp.zeros((n_blocks, Hkv, block_size, hd), jnp.bfloat16)}
+
+
 def _ring_from_prefill(k, W: int, Sc: int):
     """Pack the last W entries of k (B,H,S,hd) into ring order, padded to Sc."""
     B, H, S, hd = k.shape
@@ -96,8 +110,53 @@ def _ring_from_prefill(k, W: int, Sc: int):
 
 # ------------------------------------------------------------------ apply ----
 
+def _paged_decode(ap, q, k, v, cfg, cache, pos, block_tab, backend=None):
+    """Single-token decode against a paged KV pool.
+
+    Cache leaves are physical block pools (n_blocks, Hkv, bs, hd) shared
+    by every sequence; ``block_tab`` (B, mb) names each sequence's
+    logical blocks (entries >= n_blocks are out-of-table sentinels:
+    their reads clamp to a resident block and are masked by kv_len,
+    their writes are dropped — an idle slot touches nothing). The write
+    lands in block ``block_tab[b, pos // bs]`` at offset ``pos % bs``
+    with the same fp32 one-hot blend as the dense decode write, and the
+    reference read is the dense attention over the gathered
+    (B, Hkv, mb*bs, hd) logical view — so paged and dense decode are
+    bitwise identical. A non-reference backend reads the scattered
+    blocks directly via the block-table-prefetching paged flash-decode
+    kernel instead of materializing the gather."""
+    from repro.kernels import backend as KB
+    from repro.kernels.ref import paged_gather_kv
+    nb, Hkv, bs, hd = cache["k"].shape
+    mb = block_tab.shape[1]
+    bidx = jnp.take_along_axis(block_tab, (pos // bs)[:, None],
+                               axis=1)[:, 0]                       # (B,)
+    oh = jax.nn.one_hot(pos % bs, bs, dtype=jnp.float32)[:, None, :, None]
+    safe = jnp.clip(bidx, 0, nb - 1)
+    blk_k = jnp.take(cache["k"], safe, axis=0)         # (B, Hkv, bs, hd)
+    blk_v = jnp.take(cache["v"], safe, axis=0)
+    new_k = (blk_k * (1 - oh) + k.astype(jnp.float32) * oh
+             ).astype(jnp.bfloat16)
+    new_v = (blk_v * (1 - oh) + v.astype(jnp.float32) * oh
+             ).astype(jnp.bfloat16)
+    nk = cache["k"].at[bidx].set(new_k, mode="drop")
+    nv = cache["v"].at[bidx].set(new_v, mode="drop")
+    kv_len = jnp.minimum(pos + 1, mb * bs)
+    be = KB.get_backend(backend)
+    if be.name != "reference" and KB.mesh_local():
+        out = be.paged_decode_attention(
+            q[:, :, 0], nk, nv, block_tab, kv_len,
+            cap=cfg.attn_softcap, scale=cfg.attn_scale)[:, :, None]
+    else:
+        out = L.attention(q, paged_gather_kv(nk, block_tab),
+                          paged_gather_kv(nv, block_tab), causal=False,
+                          kv_len=kv_len, cap=cfg.attn_softcap,
+                          scale=cfg.attn_scale, backend=backend)
+    return L.out_proj(ap, out), {"k": nk, "v": nv}
+
+
 def _attn_sublayer(p, x, cfg, kind, mode, cache, pos, positions, cross=False,
-                   memory=None, backend=None):
+                   memory=None, backend=None, block_tab=None):
     """Shared attention sub-layer. Returns (y, new_cache_kv)."""
     window = cfg.window if (kind in WINDOW_KINDS and not cross) else 0
     causal = (kind != "enc") and not cross
@@ -170,7 +229,12 @@ def _attn_sublayer(p, x, cfg, kind, mode, cache, pos, positions, cross=False,
 
     # decode: x is (B,1,d); write k/v at slot, attend over valid entries.
     # pos may be a scalar (synchronized batch — dynamic_update_slice) or a
-    # (B,) vector (continuous batching — one-hot masked write).
+    # (B,) vector (continuous batching — one-hot masked write). With a
+    # block table, the cache leaves are paged pools instead of dense
+    # per-slot rows (continuous batching over shared physical blocks).
+    if block_tab is not None:
+        return _paged_decode(ap, q, k, v, cfg, cache, pos, block_tab,
+                             backend=backend)
     Sc = cache["k"].shape[2]
     if jnp.ndim(pos) == 0:
         slot = (pos % Sc) if window else jnp.minimum(pos, Sc - 1)
@@ -194,7 +258,7 @@ def _attn_sublayer(p, x, cfg, kind, mode, cache, pos, positions, cross=False,
 
 def block_apply(kind: str, p, x, cfg: ModelConfig, *, mode: str,
                 cache=None, pos=None, positions=None, memory=None,
-                backend=None):
+                backend=None, block_tab=None):
     """Returns (x_out, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
@@ -235,7 +299,8 @@ def block_apply(kind: str, p, x, cfg: ModelConfig, *, mode: str,
         return x, new_cache, aux
 
     attn_y, kv = _attn_sublayer(p, h, cfg, kind, mode, cache, pos,
-                                positions, backend=backend)
+                                positions, backend=backend,
+                                block_tab=block_tab)
     x = x + attn_y
     new_cache = dict(kv)
 

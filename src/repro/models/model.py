@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.common.config import ModelConfig, ShapeConfig
 from repro.models import layers as L
-from repro.models.blocks import block_apply, block_cache_init, block_init
+from repro.models.blocks import (block_apply, block_cache_init, block_init,
+                                 block_paged_cache_init)
 
 Params = Any
 Cache = Any
@@ -77,11 +78,40 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
             "pos": jnp.zeros((), jnp.int32)}
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                     n_blocks: int, block_size: int) -> Cache:
+    """Paged decode cache: per-layer physical block pools shared by all
+    sequences plus one per-sequence block table.
+
+    Layout per attention layer: (R, n_blocks, Hkv, block_size, hd) —
+    the pool replaces the dense (R, B, Hkv, cache_len, hd) slab. The
+    (B, cache_len // block_size) ``block_tab`` maps each sequence's
+    logical blocks onto pool blocks; ``n_blocks`` is the sentinel for
+    unmapped entries (serving/kvpool.py owns the id assignment).
+    ``cache_len`` stays the per-sequence LOGICAL capacity; the physical
+    budget is ``n_blocks * block_size`` rows, independent of batch.
+    """
+    assert cache_len % block_size == 0, (cache_len, block_size)
+
+    def stacked_pool(unit, R):
+        seg = []
+        for kind in unit:
+            one = block_paged_cache_init(kind, cfg, n_blocks, block_size)
+            seg.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (R,) + x.shape), one))
+        return seg
+    return {"segments": [stacked_pool(unit, R)
+                         for unit, R in cfg.segments],
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "block_tab": jnp.full((batch, cache_len // block_size),
+                                  n_blocks, jnp.int32)}
+
+
 # ------------------------------------------------------------------ stack ----
 
 def _apply_stack(params, cfg: ModelConfig, x, *, mode, cache=None, pos=None,
                  positions=None, memory=None, remat=False, seq_axis=None,
-                 backend=None):
+                 backend=None, block_tab=None):
     """Run all segments. Returns (x, new_segment_caches, aux)."""
     from repro.distributed.annotate import constrain_seq
     new_segs = []
@@ -100,7 +130,8 @@ def _apply_stack(params, cfg: ModelConfig, x, *, mode, cache=None, pos=None,
                 h, nc, a = block_apply(kind, p_r[ui], h, cfg, mode=mode,
                                        cache=c_r[ui], pos=pos,
                                        positions=positions, memory=memory,
-                                       backend=backend)
+                                       backend=backend,
+                                       block_tab=block_tab)
                 ncs.append(nc)
                 aux = aux + a
             if seq_axis:
@@ -276,15 +307,23 @@ def prefill_extend(params, cfg: ModelConfig, cache, batch, n_valid=None,
 
 
 def decode_step(params, cfg: ModelConfig, cache, batch, backend=None):
-    """One decode step. batch["tokens"]: (B,1). Returns (logits, cache)."""
+    """One decode step. batch["tokens"]: (B,1). Returns (logits, cache).
+
+    A cache carrying a ``block_tab`` (init_paged_cache) decodes against
+    the paged block pools; the table rides through unchanged (the engine
+    owns table mutation on the host)."""
     pos = cache["pos"]
+    tab = cache.get("block_tab")
     x, positions = _embed_inputs(params, cfg, batch, pos=pos)
     x, new_segs, _ = _apply_stack(params, cfg, x, mode="decode",
                                   cache=cache, pos=pos, positions=positions,
-                                  backend=backend)
+                                  backend=backend, block_tab=tab)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = _logits(params, cfg, x)[:, 0]
-    return logits, {"segments": new_segs, "pos": pos + 1}
+    out = {"segments": new_segs, "pos": pos + 1}
+    if tab is not None:
+        out["block_tab"] = tab
+    return logits, out
 
 
 # ------------------------------------------------------------ accounting ----

@@ -200,6 +200,14 @@ class ClusterStats:
                for t in self.traces if t.sla_ticks is not None]
         adm = sum(r["admissions"] for r in self.per_replica)
         hits = sum(r["prefix_hits"] for r in self.per_replica)
+        # KV-memory accounting (engine.kv_memory_stats per replica):
+        # fleet-wide peak bytes, preemption pressure and the
+        # shared-vs-owned block split of the paged pools — peak-based,
+        # since a drained run's instantaneous shared count is ~0
+        shared = sum(r.get("kv_blocks_shared_peak", 0)
+                     for r in self.per_replica)
+        used = sum(r.get("kv_blocks_used_peak", 0)
+                   for r in self.per_replica)
         return {
             "ticks": self.ticks,
             "requests": len(self.traces),
@@ -215,6 +223,18 @@ class ClusterStats:
                               if t.request is not None),
             "tokens_decoded": sum(r["tokens_generated"]
                                   for r in self.per_replica),
+            "kv_bytes_allocated": sum(r.get("kv_bytes_allocated", 0)
+                                      for r in self.per_replica),
+            "kv_bytes_peak": sum(r.get("kv_bytes_peak", 0)
+                                 for r in self.per_replica),
+            "preemptions": sum(r.get("preemptions", 0)
+                               for r in self.per_replica),
+            "resumes": sum(r.get("resumes", 0)
+                           for r in self.per_replica),
+            "prefix_evictions": sum(r.get("prefix_evictions", 0)
+                                    for r in self.per_replica),
+            "kv_blocks_shared_peak": shared,
+            "kv_shared_frac": round(shared / max(used, 1), 4),
             "per_replica": self.per_replica,
         }
 
@@ -228,27 +248,36 @@ class EngineCluster:
                  max_batch: Optional[int] = None,
                  cache_len: Optional[int] = None,
                  seed: Optional[int] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 kv_mode: Optional[str] = None,
+                 kv_blocks: Optional[int] = None,
+                 block_size: Optional[int] = None):
         if engines is not None:
             # prebuilt replicas keep their own configuration; sizing
             # kwargs would be silently dropped, so refuse them
             if any(v is not None for v in (cfg, params, max_batch,
-                                           cache_len, seed, backend)):
+                                           cache_len, seed, backend,
+                                           kv_mode, kv_blocks,
+                                           block_size)):
                 raise ValueError(
                     "engines= is mutually exclusive with cfg/params/"
-                    "max_batch/cache_len/seed/backend (prebuilt "
-                    "replicas keep their own configuration)")
+                    "max_batch/cache_len/seed/backend/kv_mode/"
+                    "kv_blocks/block_size (prebuilt replicas keep "
+                    "their own configuration)")
             self.replicas = list(engines)
         else:
             assert cfg is not None and params is not None
             max_batch = 8 if max_batch is None else max_batch
             cache_len = 512 if cache_len is None else cache_len
             seed = 0 if seed is None else seed
+            kv_mode = "dense" if kv_mode is None else kv_mode
             self.replicas = []
             for i in range(n_replicas):
                 e = InferenceEngine(cfg, params, max_batch=max_batch,
                                     cache_len=cache_len, seed=seed + i,
-                                    backend=backend)
+                                    backend=backend, kv_mode=kv_mode,
+                                    kv_blocks=kv_blocks,
+                                    block_size=block_size)
                 if self.replicas:
                     # identical (cfg, cache_len, backend) closures =>
                     # replicas share one jit cache: compile once, not N×
@@ -258,6 +287,7 @@ class EngineCluster:
                 self.replicas.append(e)
         self.router = make_router(router, spill_load=spill_load)
         self.backend = self.replicas[0].backend
+        self.kv_mode = self.replicas[0].kv_mode
         self.tick = 0
         self.traces: Dict[Tuple[int, int], RequestTrace] = {}
         self._next_session = 0
@@ -452,7 +482,7 @@ class EngineCluster:
                 sla_ticks=w.sla_ticks, session_id=w.session_id,
                 turn=w.turn)
         per_replica = [
-            dict(e.stats, replica=i,
+            dict(e.stats, **e.kv_memory_stats(), replica=i,
                  hit_ratio=round(e.stats["prefix_hits"]
                                  / max(e.stats["admissions"], 1), 4),
                  utilization=round(self._util_ticks[i]
@@ -465,11 +495,22 @@ class EngineCluster:
 
     # -------------------------------------------------------- stats ----
     def throughput_stats(self) -> Dict:
-        """Engine-stat aggregate (single-engine-compatible keys) plus a
-        ``per_replica`` breakdown."""
+        """Engine-stat aggregate (single-engine-compatible keys, KV
+        byte/block counters summed fleet-wide) plus a ``per_replica``
+        breakdown."""
         keys = self.replicas[0].stats.keys()
         agg: Dict = {k: sum(e.stats[k] for e in self.replicas)
                      for k in keys}
-        agg["per_replica"] = [dict(e.stats, replica=i)
-                              for i, e in enumerate(self.replicas)]
+        kv = [e.kv_memory_stats() for e in self.replicas]
+        # every numeric kv counter sums fleet-wide; the schema lives in
+        # engine.kv_memory_stats alone (no key list to keep in sync)
+        agg.update({k: sum(m[k] for m in kv) for k in kv[0]
+                    if k not in ("kv_mode", "kv_shared_frac")})
+        agg["kv_mode"] = self.kv_mode
+        agg["kv_shared_frac"] = round(
+            sum(m["kv_blocks_shared_peak"] for m in kv)
+            / max(sum(m["kv_blocks_used_peak"] for m in kv), 1), 4)
+        agg["per_replica"] = [dict(e.stats, **m, replica=i)
+                              for i, (e, m) in enumerate(
+                                  zip(self.replicas, kv))]
         return agg

@@ -22,6 +22,20 @@ This is the single-host engine the examples serve the planner with; the
 distributed story (pjit over the production mesh) reuses exactly the same
 step functions via launch/serve.py.
 
+``kv_mode`` selects the KV-cache memory manager:
+
+  * ``"dense"`` (default) — one (max_batch, cache_len) slab; admission
+    physically copies the request's prefill (and any cached prefix)
+    into its slot;
+  * ``"paged"``  — a fixed budget of ``kv_blocks`` blocks of
+    ``block_size`` rows (serving/kvpool.py) with per-slot block tables:
+    a registered prefix's blocks are CoW-shared by every admission
+    (refcount++, zero copies), admission is gated on free blocks, cold
+    prefix pins are LRU-evicted under pressure and the lowest-priority
+    running request is preempted-and-requeued (bit-exact swap) instead
+    of dropped. Dense and paged decode are bitwise identical
+    (DESIGN.md §Paged KV cache).
+
 ``backend`` selects the kernel backend (kernels/backend.py) for every
 jitted step — ``"pallas"`` routes prefill/extend attention through
 flash_prefill, the continuous-batching decode through flash_decode (per
@@ -42,10 +56,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ModelConfig, WINDOW_KINDS
-from repro.models.model import (decode_step, init_cache, prefill,
-                                prefill_extend)
+from repro.kernels.ref import paged_gather_kv
+from repro.models.model import (decode_step, init_cache, init_paged_cache,
+                                prefill, prefill_extend)
+from repro.serving.kvpool import BlockTable, KVBlockPool
 from repro.serving.sampling import SamplerConfig, sample
 from repro.serving.tokenizer import SPECIALS, TOKENIZER
+
+KV_MODES = ("dense", "paged")
 
 
 @dataclass
@@ -59,10 +77,15 @@ class Request:
     # filled by the engine:
     output: List[int] = field(default_factory=list)
     done: bool = False
-    finish_reason: Optional[str] = None   # "eos"|"max_new_tokens"|"cache_len"
+    # "eos" | "max_new_tokens" | "cache_len" | "kv_oom" (paged: the
+    # request can never fit the physical block budget)
+    finish_reason: Optional[str] = None
     enqueue_t: float = 0.0
     first_token_t: float = 0.0
     finish_t: float = 0.0
+    # paged preemption: host-side copy of the KV rows generated so far
+    # ({"segments": ..., "pos": n}); set while the request sits requeued
+    swap: Optional[dict] = None
 
 
 @dataclass
@@ -86,10 +109,58 @@ def _insert_slot(batched, single, slot: int):
     return out
 
 
+@jax.jit
+def _paged_scatter(segments, single_segments, ids):
+    """Scatter a B=1 cache's rows into pool blocks.
+
+    ``segments``: paged pools, leaves (R, n_blocks, Hkv, bs, hd);
+    ``single_segments``: a prefill/extend result, leaves
+    (R, 1, Hkv, mb*bs, hd); ``ids``: (mb,) int32 destination block per
+    logical block — entries >= n_blocks (the sentinel) are dropped, so
+    one trace serves any row range (shared prefix blocks are skipped by
+    sentinel-masking their logical indices)."""
+    def ins(pages, s):
+        R, nb, Hkv, bs, hd = pages.shape
+        mb = s.shape[3] // bs
+        upd = s[:, 0].reshape(R, Hkv, mb, bs, hd).transpose(0, 2, 1, 3, 4)
+        return pages.at[:, ids].set(upd.astype(pages.dtype), mode="drop")
+    return jax.tree.map(ins, segments, single_segments)
+
+
+@jax.jit
+def _paged_gather(segments, ids):
+    """Gather one sequence's logical rows out of the pools as a B=1
+    cache pytree (the swap-out payload of preemption; bit-exact, so a
+    resumed request decodes as if never interrupted). ``ids``: (mb,)
+    block ids, clip-padded — rows past the table are garbage and are
+    never scattered back. Always full logical width: one trace for any
+    fill level, paid only on the rare preemption path. The gather
+    itself is kernels.ref.paged_gather_kv, vmapped over the stacked
+    layer axis — one clip/sentinel rule for every paged read."""
+    def g(pages):
+        return jax.vmap(lambda p: paged_gather_kv(p, ids[None]))(pages)
+    return jax.tree.map(g, segments)
+
+
+def _kv_cache_bytes(segments) -> int:
+    """Total bytes of the KV leaves (k/v and cross-attention ck/cv) in a
+    cache pytree's segments."""
+    total = 0
+    for seg in segments:
+        for c in seg:
+            for key in ("k", "v", "ck", "cv"):
+                if isinstance(c, dict) and key in c:
+                    leaf = c[key]
+                    total += int(leaf.size) * leaf.dtype.itemsize
+    return total
+
+
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  cache_len: int = 512, seed: int = 0,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, kv_mode: str = "dense",
+                 kv_blocks: Optional[int] = None,
+                 block_size: Optional[int] = None):
         from repro.kernels.backend import get_backend
         self.cfg = cfg
         self.params = params
@@ -99,8 +170,43 @@ class InferenceEngine:
         self.backend = get_backend(backend).name
         self.seed = seed
         self.rng = jax.random.PRNGKey(seed)
-        self.cache = init_cache(cfg, max_batch, cache_len)
-        self.cache["pos"] = jnp.zeros((max_batch,), jnp.int32)
+        if kv_mode not in KV_MODES:
+            raise ValueError(f"kv_mode must be one of {KV_MODES}, "
+                             f"got {kv_mode!r}")
+        self.kv_mode = kv_mode
+        kinds = {k for unit, _ in cfg.segments for k in unit}
+        if kv_mode == "paged":
+            self.block_size = 16 if block_size is None else block_size
+            bs = self.block_size
+            if not kinds <= {"full", "dense", "moe"}:
+                raise ValueError(
+                    f"kv_mode='paged' needs a pure-attention stack "
+                    f"(full/dense/moe), got kinds {sorted(kinds)}")
+            if cache_len % bs:
+                raise ValueError(f"cache_len {cache_len} must be a "
+                                 f"multiple of block_size {bs}")
+            # default physical budget: exactly the dense reservation
+            self.kv_blocks = (kv_blocks if kv_blocks is not None
+                              else max_batch * cache_len // bs)
+            self.pool = KVBlockPool(self.kv_blocks, bs)
+            self.cache = init_paged_cache(cfg, max_batch, cache_len,
+                                          self.kv_blocks, bs)
+            self.tables: List[Optional[BlockTable]] = [None] * max_batch
+            self._prefix_tables: Dict[str, BlockTable] = {}
+            self._prefix_lru: Dict[str, int] = {}
+            self._lru_tick = 0
+        else:
+            if kv_blocks is not None or block_size is not None:
+                # mirror EngineCluster's refusal of sizing kwargs that
+                # would be silently dropped
+                raise ValueError(
+                    "kv_blocks/block_size apply only to "
+                    "kv_mode='paged'")
+            self.block_size = 0
+            self.kv_blocks = 0
+            self.pool = None
+            self.cache = init_cache(cfg, max_batch, cache_len)
+            self.cache["pos"] = jnp.zeros((max_batch,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * max_batch
         # deque: admission pops the head once per free slot; a list's
         # pop(0) is O(n) and goes quadratic under cluster-scale queues
@@ -111,7 +217,12 @@ class InferenceEngine:
         self.stats = {"decode_steps": 0, "prefills": 0,
                       "tokens_generated": 0, "prefix_hits": 0,
                       "prefix_tokens_saved": 0, "admissions": 0,
-                      "prefix_registrations": 0}
+                      "prefix_registrations": 0, "preemptions": 0,
+                      "resumes": 0, "prefix_evictions": 0}
+        self._kv_bytes_total = _kv_cache_bytes(self.cache["segments"])
+        self._kv_peak_blocks = 0       # paged: peak pool blocks in use
+        self._kv_peak_shared = 0       # paged: peak CoW-shared blocks
+        self._kv_peak_slots = 0        # dense: peak busy slots
 
         be = self.backend
         self._prefill = jax.jit(
@@ -122,7 +233,6 @@ class InferenceEngine:
         self._extend = jax.jit(
             lambda p, c, b, n: prefill_extend(p, cfg, c, b, n_valid=n,
                                               backend=be))
-        kinds = {k for unit, _ in cfg.segments for k in unit}
         # multi-token cache extension: no ring buffers / cross-attention;
         # bucket-padded extends additionally require a stateless
         # (pure-attention) stack — recurrent state would step through pads
@@ -176,12 +286,24 @@ class InferenceEngine:
             self.seed = seed
         self.rng = jax.random.PRNGKey(self.seed)
         self.cache["pos"] = jnp.zeros((self.max_batch,), jnp.int32)
+        if self.kv_mode == "paged":
+            self.pool = KVBlockPool(self.kv_blocks, self.block_size)
+            self.tables = [None] * self.max_batch
+            self._prefix_tables = {}
+            self._prefix_lru = {}
+            self._lru_tick = 0
+            self.cache["block_tab"] = jnp.full(
+                (self.max_batch, self.cache_len // self.block_size),
+                self.kv_blocks, jnp.int32)
         self.slots = [None] * self.max_batch
         self.queue.clear()
         self.prefixes.clear()
         self._next_id = 0
         self._next_session = 0
         self.stats = {k: 0 for k in self.stats}
+        self._kv_peak_blocks = 0
+        self._kv_peak_shared = 0
+        self._kv_peak_slots = 0
         self._last_tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
 
     # -------------------------------------------------- prefix caching ----
@@ -212,6 +334,8 @@ class InferenceEngine:
         logits, cache = self._decode_through(logits, cache,
                                              ids[len(head):])
         self.prefixes[key] = CachedPrefix(ids, cache, logits)
+        if self.kv_mode == "paged":
+            self._pin_prefix(key, self.prefixes[key])
         return len(ids)
 
     def _decode_through(self, logits, cache, tokens: List[int]
@@ -261,6 +385,196 @@ class InferenceEngine:
                  "pos": pref.cache["pos"]}
         return self._decode_through(pref.logits, cache, suffix)
 
+    # ------------------------------------------------ paged KV memory ----
+    # Host-side policy over serving/kvpool.py: the pool owns block ids
+    # and refcounts; the engine owns what is cold (LRU prefix pins) and
+    # who is lowest priority (preempt the latest-admitted request).
+    def _tab_ids(self, blocks: List[int], pad: int) -> np.ndarray:
+        """A full (max_blocks,) table row: real block ids then ``pad``
+        (the sentinel ``kv_blocks`` for drop-masked device rows, 0 for
+        clip-safe gathers)."""
+        ids = np.full((self.cache_len // self.block_size,), pad, np.int32)
+        ids[:len(blocks)] = blocks
+        return ids
+
+    def _pin_prefix(self, key: str, pref: CachedPrefix):
+        """Write the prefix's KV rows into pool blocks ONCE and pin them
+        (an LRU-evictable hold). Every admission that hits the prefix
+        forks this table — refcount++, zero copies — instead of copying
+        the rows into its slot. If the pool cannot hold the prefix even
+        after evicting colder pins, it stays unpinned: hits still reuse
+        the staged prefill, they just scatter their own copy."""
+        old = self._prefix_tables.pop(key, None)
+        if old is not None:
+            self._prefix_lru.pop(key, None)
+            self.pool.free(old)
+        need = self.pool.blocks_needed(len(pref.ids))
+        if need > self.pool.n_blocks or not self._reserve(need):
+            return
+        table = self.pool.alloc(len(pref.ids))
+        ids = self._tab_ids(table.blocks, self.kv_blocks)
+        self.cache["segments"] = _paged_scatter(
+            self.cache["segments"], pref.cache["segments"],
+            jnp.asarray(ids))
+        self._prefix_tables[key] = table
+        self._touch_prefix(key)
+        self._note_kv_peak()
+
+    def _touch_prefix(self, key: str):
+        self._prefix_lru[key] = self._lru_tick
+        self._lru_tick += 1
+
+    def _reserve(self, need: int, keep: Optional[str] = None) -> bool:
+        """True once >= ``need`` blocks are free, evicting cold prefix
+        pins (LRU; never ``keep`` — the pin an admission is about to
+        fork) as required. Evicts only when eviction can actually
+        satisfy the request: pins are never re-established (only
+        register_prefix pins), so destroying them for an unsatisfiable
+        reservation would end zero-copy sharing for nothing. Never
+        touches running requests — that escalation (preemption) is
+        _ensure_room's call."""
+        if self.pool.free_blocks() >= need:
+            return True
+        # blocks an eviction sweep would actually free: a pin's
+        # exclusively-held blocks (shared ones stay with their forks)
+        gain = sum(1 for k, t in self._prefix_tables.items()
+                   if k != keep
+                   for b in t.blocks if self.pool.ref[b] == 1)
+        if self.pool.free_blocks() + gain < need:
+            return False
+        while self.pool.free_blocks() < need \
+                and self._evict_cold_prefix(keep):
+            pass
+        return self.pool.free_blocks() >= need
+
+    def _evict_cold_prefix(self, keep: Optional[str] = None) -> bool:
+        """Evict the LRU prefix pin among those whose eviction frees at
+        least one block NOW (all-shared pins are in active use — their
+        blocks return via their forks anyway, so destroying the pin
+        would cost future sharing and gain nothing)."""
+        candidates = [k for k, t in self._prefix_tables.items()
+                      if k != keep
+                      and any(self.pool.ref[b] == 1 for b in t.blocks)]
+        if not candidates:
+            return False
+        key = min(candidates, key=self._prefix_lru.get)
+        self.pool.free(self._prefix_tables.pop(key))
+        del self._prefix_lru[key]
+        self.stats["prefix_evictions"] += 1
+        return True
+
+    def _install(self, slot: int, req: Request, table: BlockTable,
+                 single_segments, scatter_from: int):
+        """Bind (request, block table) to a slot: scatter the B=1 cache
+        rows of logical blocks [scatter_from, len(table)) into the
+        table's blocks (blocks below ``scatter_from`` are shared prefix
+        blocks — already written at pin time, never copied), then point
+        the device block-table row and pos at them."""
+        ids = self._tab_ids(table.blocks, self.kv_blocks)
+        scat = ids.copy()
+        scat[:scatter_from] = self.kv_blocks
+        self.cache["segments"] = _paged_scatter(
+            self.cache["segments"], single_segments, jnp.asarray(scat))
+        self.cache["block_tab"] = self.cache["block_tab"].at[slot].set(
+            jnp.asarray(ids))
+        self.cache["pos"] = self.cache["pos"].at[slot].set(table.n_tokens)
+        self.slots[slot] = req
+        self.tables[slot] = table
+        self._note_kv_peak()
+
+    def _release_slot(self, slot: int):
+        """Free a paged slot's blocks and sentinel its table row."""
+        self.pool.free(self.tables[slot])
+        self.tables[slot] = None
+        self.cache["block_tab"] = self.cache["block_tab"].at[slot].set(
+            self.kv_blocks)
+
+    def _preempt(self, slot: int):
+        """Swap the slot's KV rows to host memory, free its blocks and
+        requeue it at the queue head. The swap payload is bit-exact, so
+        the resumed request decodes the same tokens it would have —
+        sampler-seeded requests are provably unperturbed (their keys
+        fold in len(output)); engine-stream requests see a different key
+        schedule, exactly as any co-tenancy change does."""
+        req = self.slots[slot]
+        table = self.tables[slot]
+        gather_ids = jnp.asarray(self._tab_ids(table.blocks, 0))
+        segs = jax.tree.map(np.asarray,
+                            _paged_gather(self.cache["segments"],
+                                          gather_ids))
+        # retain only the rows the request actually holds (.copy() so
+        # the slice drops the full-width base buffer); the resume path
+        # pads back to the logical width, keeping one scatter trace
+        rows = len(table.blocks) * self.block_size
+        segs = jax.tree.map(lambda a: a[:, :, :, :rows].copy(), segs)
+        req.swap = {"segments": segs, "pos": table.n_tokens}
+        self.slots[slot] = None
+        self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+        self._release_slot(slot)
+        self.queue.appendleft(req)
+        self.stats["preemptions"] += 1
+
+    def _finish_now(self, req: Request, reason: str):
+        req.done = True
+        req.finish_reason = reason
+        req.finish_t = time.time()
+        if not req.first_token_t:
+            # finished without ever sampling (paged cache_len/kv_oom
+            # refusals): leave no 0.0 sentinel for TTFT math downstream
+            req.first_token_t = req.finish_t
+
+    def _ensure_room(self) -> List[Request]:
+        """Pre-decode: every active slot must own a block for the row it
+        is about to write. Under memory pressure, escalate: evict cold
+        prefix pins (inside _reserve), then preempt-and-requeue the
+        lowest-priority (latest-admitted) running request — never drop
+        it. A lone request that has outgrown the whole pool finishes
+        with ``kv_oom`` (nothing left to preempt)."""
+        finished: List[Request] = []
+        for i in range(self.max_batch):
+            if self.slots[i] is None:
+                continue
+            table = self.tables[i]
+            if len(table.blocks) * self.block_size > table.n_tokens:
+                continue                      # room for the next row
+            blocked = False
+            while not self._reserve(1):
+                active = [j for j in range(self.max_batch)
+                          if self.slots[j] is not None]
+                victim = max(active,
+                             key=lambda j: self.slots[j].request_id)
+                if victim == i and len(active) == 1:
+                    req = self.slots[i]
+                    self._finish_now(req, "kv_oom")
+                    finished.append(req)
+                    self.slots[i] = None
+                    self.cache["pos"] = self.cache["pos"].at[i].set(0)
+                    self._release_slot(i)
+                    blocked = True
+                    break
+                self._preempt(victim)
+                if victim == i:
+                    blocked = True
+                    break
+            if blocked:
+                continue
+            j = len(table.blocks)
+            block = self.pool.append_block(table)
+            self.cache["block_tab"] = \
+                self.cache["block_tab"].at[i, j].set(block)
+        self._note_kv_peak()
+        return finished
+
+    def _note_kv_peak(self):
+        if self.kv_mode == "paged":
+            self._kv_peak_blocks = max(self._kv_peak_blocks,
+                                       self.pool.used_blocks())
+            self._kv_peak_shared = max(self._kv_peak_shared,
+                                       self.pool.shared_blocks())
+        else:
+            self._kv_peak_slots = max(self._kv_peak_slots,
+                                      self.busy_slots())
+
     # ------------------------------------------------------- sessions ----
     def open_session(self, prefix_key: Optional[str] = None,
                      session_id: Optional[int] = None) -> "EngineSession":
@@ -286,44 +600,66 @@ class InferenceEngine:
         return jax.random.fold_in(jax.random.PRNGKey(req.sampler.seed),
                                   len(req.output))
 
+    def _prefix_hit(self, req: Request) -> Optional[CachedPrefix]:
+        """The cached prefix this request can extend, if any."""
+        pref = (self.prefixes.get(req.prefix_key)
+                if req.prefix_key else None)
+        if pref is not None and len(req.prompt) > len(pref.ids) and \
+                len(req.prompt) < self.cache_len and \
+                req.prompt[:len(pref.ids)] == pref.ids:
+            return pref
+        return None
+
+    _UNSET = object()
+
+    def _prefill_request(self, req: Request, pref=_UNSET):
+        """Compute a request's admission logits + B=1 cache — via the
+        prefix cache when it hits, full prefill otherwise. ``pref``
+        takes a precomputed ``_prefix_hit`` result (paged admission
+        already needs it for the block math). Returns
+        (logits, cache, hit_prefix_or_None)."""
+        if pref is self._UNSET:
+            pref = self._prefix_hit(req)
+        if pref is not None:
+            logits, cache1 = self._extend_prefix(
+                pref, req.prompt[len(pref.ids):])
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_tokens_saved"] += len(pref.ids)
+            return logits, cache1, pref
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, cache1 = self._prefill(self.params, {"tokens": prompt})
+        self.stats["prefills"] += 1
+        return logits, dict(cache1), None
+
+    def _first_token(self, req: Request, logits) -> bool:
+        """Sample the admission token; True when it is terminal (an
+        <eos> first token, or a max_new_tokens=1 budget — never decode
+        past it; the request then never occupies a slot)."""
+        self.rng, k = jax.random.split(self.rng)
+        tok = int(sample(logits, self._request_key(req, k),
+                         req.sampler)[0])
+        req.output.append(tok)
+        req.first_token_t = time.time()
+        if tok == SPECIALS["<eos>"] or \
+                len(req.output) >= req.max_new_tokens:
+            self._finish_now(req, "eos" if tok == SPECIALS["<eos>"]
+                             else "max_new_tokens")
+            return True
+        return False
+
     def _admit(self) -> List[Request]:
         """Prefill queued requests into free slots; returns the ones
-        whose admission token was already terminal (they never occupy a
-        slot — the slot stays open for the next queued request)."""
+        whose admission token was already terminal."""
+        if self.kv_mode == "paged":
+            return self._admit_paged()
         finished: List[Request] = []
         free = deque(self._free_slots())
         while free and self.queue:
             slot = free[0]
             req = self.queue.popleft()
             self.stats["admissions"] += 1
-            pref = (self.prefixes.get(req.prefix_key)
-                    if req.prefix_key else None)
-            if pref is not None and len(req.prompt) > len(pref.ids) and \
-                    len(req.prompt) < self.cache_len and \
-                    req.prompt[:len(pref.ids)] == pref.ids:
-                logits, cache1 = self._extend_prefix(
-                    pref, req.prompt[len(pref.ids):])
-                self.stats["prefix_hits"] += 1
-                self.stats["prefix_tokens_saved"] += len(pref.ids)
-            else:
-                prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                logits, cache1 = self._prefill(self.params,
-                                               {"tokens": prompt})
-                self.stats["prefills"] += 1
-                cache1 = dict(cache1)
-            self.rng, k = jax.random.split(self.rng)
-            tok = int(sample(logits, self._request_key(req, k),
-                             req.sampler)[0])
-            req.output.append(tok)
-            req.first_token_t = time.time()
-            if tok == SPECIALS["<eos>"] or \
-                    len(req.output) >= req.max_new_tokens:
-                # terminal at admission: an <eos> first token, or a
-                # max_new_tokens=1 budget — never decode past it
-                req.done = True
-                req.finish_reason = ("eos" if tok == SPECIALS["<eos>"]
-                                     else "max_new_tokens")
-                req.finish_t = time.time()
+            logits, cache1, _ = self._prefill_request(req)
+            if self._first_token(req, logits):
                 finished.append(req)
                 continue
             free.popleft()
@@ -331,20 +667,147 @@ class InferenceEngine:
             self.cache["pos"] = self.cache["pos"].at[slot].set(
                 len(req.prompt))
             self.slots[slot] = req
-            self._last_tokens = self._last_tokens.at[slot, 0].set(tok)
+            self._last_tokens = self._last_tokens.at[slot, 0].set(
+                req.output[-1])
+        return finished
+
+    def _admit_paged(self) -> List[Request]:
+        """Paged admission: FIFO like dense, but gated on free blocks —
+        a queue head that does not fit (after LRU-evicting cold prefix
+        pins) WAITS for running requests to free memory instead of being
+        admitted or dropped. Requests that can never fit the pool finish
+        immediately with ``kv_oom``; preempted requests at the head are
+        restored from their swap payload without recomputation."""
+        finished: List[Request] = []
+        free = deque(self._free_slots())
+        while free and self.queue:
+            slot = free[0]
+            req = self.queue[0]
+            if req.swap is not None:                       # resume
+                total = req.swap["pos"]
+                # +1: room for the decode write this same step — without
+                # it a resumed request preempts itself right back out
+                need = self.pool.blocks_needed(total + 1)
+                if need > self.pool.n_blocks:
+                    self.queue.popleft()
+                    self._finish_now(req, "kv_oom")
+                    finished.append(req)
+                    continue
+                if not self._reserve(need):
+                    break                                  # wait
+                self.queue.popleft()
+                # hold the decode-write headroom block NOW — a reserve
+                # that is only re-checked later can be consumed by the
+                # next admission in this same loop
+                table = self.pool.alloc(total + 1)
+                table.n_tokens = total
+                # pad the sliced swap rows back to the logical width so
+                # _paged_scatter keeps one trace for any fill level
+                pad = self.cache_len
+                segs = jax.tree.map(
+                    lambda a: np.pad(a, ((0, 0), (0, 0), (0, 0),
+                                         (0, pad - a.shape[3]),
+                                         (0, 0))),
+                    req.swap["segments"])
+                self._install(slot, req, table, segs, scatter_from=0)
+                self._last_tokens = self._last_tokens.at[slot, 0].set(
+                    req.output[-1])
+                req.swap = None
+                self.stats["resumes"] += 1
+                free.popleft()
+                continue
+            total = len(req.prompt)
+            if total >= self.cache_len:
+                # no room in the logical view for even one decode write;
+                # dense truncates the prefill and emits a token or two
+                # before dying with "cache_len" — paged refuses up front
+                # instead of letting the block math run off the table
+                self.queue.popleft()
+                self._finish_now(req, "cache_len")
+                finished.append(req)
+                continue
+            # zero-copy sharing needs the prefix PINNED (its blocks in
+            # the pool); a hit on an evicted pin still reuses the staged
+            # prefill but scatters a private copy (j0 = 0)
+            pref = self._prefix_hit(req)
+            ptab = (self._prefix_tables.get(req.prefix_key)
+                    if pref is not None else None)
+            j0 = (len(pref.ids) // self.block_size
+                  if ptab is not None else 0)
+            if ptab is not None:
+                # LRU-touch at the hit decision, not after install — a
+                # terminal-first-token admission must still keep a hot
+                # pin warm
+                self._touch_prefix(req.prefix_key)
+            # +1 as above: prompt blocks plus the imminent decode write
+            need = self.pool.blocks_needed(total + 1) - j0
+            if need > self.pool.n_blocks:
+                self.queue.popleft()
+                self._finish_now(req, "kv_oom")
+                finished.append(req)
+                continue
+            if not self._reserve(need, keep=(req.prefix_key
+                                             if ptab is not None
+                                             else None)):
+                if self.busy_slots() > 0:
+                    break      # wait: running requests will free blocks
+                # nothing running will ever free blocks; last resort,
+                # retry as a private (unshared) copy — this may evict
+                # the very pin we would have forked, the only remaining
+                # path to progress
+                if ptab is not None:
+                    ptab, j0 = None, 0
+                    need = self.pool.blocks_needed(total + 1)
+                if not self._reserve(need):
+                    # the head can never fit — fail it, don't deadlock
+                    self.queue.popleft()
+                    self._finish_now(req, "kv_oom")
+                    finished.append(req)
+                    continue
+            self.queue.popleft()
+            self.stats["admissions"] += 1
+            logits, cache1, _ = self._prefill_request(req, pref)
+            if self._first_token(req, logits):
+                finished.append(req)
+                continue
+            # the +1 headroom block is allocated (held), not just
+            # reserved — see the resume path above
+            if ptab is not None:
+                # CoW fork: share every fully-covered prefix block
+                # (refcount++), own a fresh copy of the partial tail
+                # block and the suffix blocks
+                table = self.pool.fork(ptab, total)
+                self.pool.cow_from(table, j0)
+                self.pool.grow(table, total + 1)
+            else:
+                table = self.pool.alloc(total + 1)
+            table.n_tokens = total
+            self._install(slot, req, table, cache1["segments"],
+                          scatter_from=j0)
+            self._last_tokens = self._last_tokens.at[slot, 0].set(
+                req.output[-1])
+            free.popleft()
         return finished
 
     def step(self) -> List[Request]:
         """One engine iteration: admit from queue, decode one token for
         every active slot. Returns newly finished requests (including
-        any that terminated on their admission token)."""
+        any that terminated on their admission token). Paged mode
+        additionally grows block tables before the decode write and may
+        preempt-and-requeue under memory pressure (_ensure_room)."""
         finished = self._admit()
+        self._note_kv_peak()
+        if self.kv_mode == "paged":
+            finished.extend(self._ensure_room())
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return finished
         logits, self.cache = self._decode(self.params, self.cache,
                                           {"tokens": self._last_tokens})
         self.stats["decode_steps"] += 1
+        if self.kv_mode == "paged":
+            for i in active:          # one KV row written per sequence
+                self.tables[i].n_tokens += 1
         # per-slot sampling: each slot draws its own engine-stream key,
         # unless the request carries a per-request seed (_request_key)
         for i in active:
@@ -358,14 +821,14 @@ class InferenceEngine:
             hit_cap = len(req.output) >= req.max_new_tokens
             hit_len = int(self.cache["pos"][i]) + 1 >= self.cache_len - 1
             if tok == SPECIALS["<eos>"] or hit_cap or hit_len:
-                req.done = True
-                req.finish_reason = ("eos" if tok == SPECIALS["<eos>"]
-                                     else "max_new_tokens" if hit_cap
-                                     else "cache_len")
-                req.finish_t = time.time()
+                self._finish_now(req, "eos" if tok == SPECIALS["<eos>"]
+                                 else "max_new_tokens" if hit_cap
+                                 else "cache_len")
                 finished.append(req)
                 self.slots[i] = None
                 self.cache["pos"] = self.cache["pos"].at[i].set(0)
+                if self.kv_mode == "paged":
+                    self._release_slot(i)
         return finished
 
     def run_until_done(self, max_iters: int = 10_000) -> List[Request]:
@@ -378,7 +841,41 @@ class InferenceEngine:
         return done
 
     def throughput_stats(self) -> Dict[str, float]:
-        return dict(self.stats)
+        return {**self.stats, **self.kv_memory_stats()}
+
+    def kv_memory_stats(self) -> Dict:
+        """KV-memory accounting, apples-to-apples across modes:
+        ``kv_bytes_allocated`` is the physical reservation (dense: the
+        full (max_batch, cache_len) slab; paged: the block pool),
+        ``kv_bytes_in_use``/``kv_bytes_peak`` what live requests
+        actually hold (dense reserves a whole slot per request), and
+        ``kv_shared_frac`` the fraction of in-use blocks CoW-shared
+        between holders (dense never shares)."""
+        if self.kv_mode == "paged":
+            ps = self.pool.stats()
+            bpb = self._kv_bytes_total // max(self.kv_blocks, 1)
+            used = ps["kv_blocks_used"]
+            return {**ps, "kv_mode": "paged",
+                    "kv_bytes_allocated": self._kv_bytes_total,
+                    "kv_bytes_in_use": used * bpb,
+                    "kv_bytes_peak": self._kv_peak_blocks * bpb,
+                    "kv_blocks_used_peak": self._kv_peak_blocks,
+                    "kv_blocks_shared_peak": self._kv_peak_shared,
+                    # peak-based: after a run drains, request tables are
+                    # freed and the instantaneous shared count is ~0 —
+                    # the peaks are what the run actually exercised
+                    "kv_shared_frac": round(
+                        self._kv_peak_shared
+                        / max(self._kv_peak_blocks, 1), 4)}
+        per_slot = self._kv_bytes_total // max(self.max_batch, 1)
+        return {"kv_mode": "dense",
+                "kv_bytes_allocated": self._kv_bytes_total,
+                "kv_bytes_in_use": self.busy_slots() * per_slot,
+                "kv_bytes_peak": self._kv_peak_slots * per_slot,
+                "kv_blocks_total": 0, "kv_blocks_used": 0,
+                "kv_blocks_free": 0, "kv_blocks_shared": 0,
+                "kv_blocks_owned": 0, "kv_blocks_used_peak": 0,
+                "kv_blocks_shared_peak": 0, "kv_shared_frac": 0.0}
 
 
 @dataclass

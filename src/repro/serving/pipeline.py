@@ -71,6 +71,7 @@ class PipelineStats:
 
     engine_backend: str = ""     # kernel backend of the mirrored engine
     engine_replicas: int = 0     # 1 = single engine, N = EngineCluster
+    engine_kv_mode: str = ""     # "dense" | "paged" KV-cache manager
 
     def summary(self) -> Dict[str, float]:
         sizes = self.gate_batch_sizes or [0]
@@ -81,7 +82,8 @@ class PipelineStats:
                 "peak_concurrent": self.peak_concurrent,
                 "engine_turns": self.engine_turns,
                 "engine_backend": self.engine_backend,
-                "engine_replicas": self.engine_replicas}
+                "engine_replicas": self.engine_replicas,
+                "engine_kv_mode": self.engine_kv_mode}
 
 
 class GeckOptPipeline:
@@ -107,6 +109,7 @@ class GeckOptPipeline:
             # an EngineCluster carries .replicas; a bare engine is 1
             self.stats.engine_replicas = len(
                 getattr(engine, "replicas", ())) or 1
+            self.stats.engine_kv_mode = getattr(engine, "kv_mode", "")
         self._engine_sessions = []
 
     # ---------------------------------------------------------- stages ----

@@ -1,0 +1,144 @@
+"""KV block-pool allocator invariants (serving/kvpool.py), as a unit.
+
+The engine-level dense-vs-paged parity tests (test_paged_engine.py)
+exercise the allocator only along serving paths; here random
+alloc/fork/cow/grow/free sequences hammer it directly: refcounts always
+mirror the live tables, the free list never holds a referenced block,
+free+used is conserved, and double-frees raise instead of corrupting.
+Driven twice — seeded random sequences (always run) and hypothesis
+(when installed, skipped cleanly otherwise like test_properties.py).
+"""
+import random
+from collections import Counter
+
+import pytest
+
+from repro.serving.kvpool import BlockTable, KVBlockPool, KVPoolExhausted
+
+N_BLOCKS, BLOCK_SIZE = 8, 4
+
+
+# ----------------------------------------------------------- unit tests ----
+
+def test_alloc_is_deterministic_lowest_id_first():
+    pool = KVBlockPool(N_BLOCKS, BLOCK_SIZE)
+    t = pool.alloc(3 * BLOCK_SIZE)
+    assert t.blocks == [0, 1, 2] and t.n_tokens == 3 * BLOCK_SIZE
+    pool.free(t)
+    # freed blocks come back lowest-id-first, not in LIFO order
+    t2 = pool.alloc(2 * BLOCK_SIZE + 1)
+    assert t2.blocks == [0, 1, 2]
+
+
+def test_blocks_needed_is_ceil_div():
+    pool = KVBlockPool(N_BLOCKS, BLOCK_SIZE)
+    assert [pool.blocks_needed(n) for n in (0, 1, 4, 5, 8)] \
+        == [0, 1, 1, 2, 2]
+
+
+def test_fork_shares_and_cow_privatizes():
+    pool = KVBlockPool(N_BLOCKS, BLOCK_SIZE)
+    prefix = pool.alloc(10)                    # blocks [0,1,2], 2 full
+    fork = pool.fork(prefix, n_tokens=14)
+    assert fork.blocks == prefix.blocks
+    assert pool.shared_blocks() == 3 and pool.used_blocks() == 3
+    # CoW the partial tail (logical block 2) => fresh block, prefix keeps
+    # its own copy; the two full blocks stay shared
+    changed = pool.cow_from(fork, 2)
+    assert changed == [2] and fork.blocks[:2] == prefix.blocks[:2]
+    assert fork.blocks[2] != prefix.blocks[2]
+    assert pool.shared_blocks() == 2
+    pool.grow(fork, 17)                        # needs a 5th logical block
+    assert len(fork.blocks) == 5 and fork.n_tokens == 17
+    # cow_from keeps already-exclusive entries: a fully-owned table is
+    # untouched
+    solo = pool.alloc(2 * BLOCK_SIZE)
+    assert pool.cow_from(solo, 0) == []
+    pool.free(solo)
+    pool.free(fork)
+    assert pool.used_blocks() == 3 and pool.shared_blocks() == 0
+    pool.free(prefix)
+    assert pool.free_blocks() == N_BLOCKS
+
+
+def test_exhaustion_and_double_free_raise():
+    pool = KVBlockPool(2, BLOCK_SIZE)
+    t = pool.alloc(2 * BLOCK_SIZE)
+    with pytest.raises(KVPoolExhausted):
+        pool.alloc(1)
+    with pytest.raises(KVPoolExhausted):
+        pool.append_block(t)
+    pool.free(t)
+    pool.free(t)                 # freed tables hold no blocks: a no-op
+    with pytest.raises(KVPoolExhausted):
+        pool._release(0)         # but releasing a free block raises
+
+
+def test_append_block_does_not_advance_tokens():
+    pool = KVBlockPool(N_BLOCKS, BLOCK_SIZE)
+    t = pool.alloc(BLOCK_SIZE)
+    b = pool.append_block(t)
+    assert t.blocks == [0, b] and t.n_tokens == BLOCK_SIZE
+
+
+# ------------------------------------------------- property sequences ----
+
+def _apply_ops(ops):
+    """Interpret (code, a, b) triples as pool operations against a live
+    mirror; check pool invariants and the refcount mirror after every
+    op. Exhaustion is a legal outcome, corruption is not."""
+    pool = KVBlockPool(N_BLOCKS, BLOCK_SIZE)
+    live = []
+
+    def crosscheck():
+        pool.check_invariants()
+        refs = Counter(b for t in live for b in t.blocks)
+        assert refs == Counter({b: r for b, r in enumerate(pool.ref)
+                                if r > 0}), (refs, pool.ref)
+        assert pool.used_blocks() + pool.free_blocks() == N_BLOCKS
+
+    for code, a, b in ops:
+        op = code % 5
+        try:
+            if op == 0:                                        # alloc
+                live.append(pool.alloc(1 + a % (N_BLOCKS * BLOCK_SIZE)))
+            elif op == 1 and live:                             # fork
+                live.append(pool.fork(live[a % len(live)]))
+            elif op == 2 and live:                             # cow
+                t = live[a % len(live)]
+                pool.cow_from(t, b % (len(t.blocks) + 1))
+            elif op == 3 and live:                             # grow
+                t = live[a % len(live)]
+                pool.grow(t, t.n_tokens + b % (2 * BLOCK_SIZE))
+            elif op == 4 and live:                             # free
+                pool.free(live.pop(a % len(live)))
+        except KVPoolExhausted:
+            pass
+        crosscheck()
+    for t in live:
+        pool.free(t)
+    pool.check_invariants()
+    # every refcount returned to zero: the pool is whole again
+    assert pool.free_blocks() == N_BLOCKS
+    assert all(r == 0 for r in pool.ref)
+
+
+def test_random_op_sequences_preserve_invariants():
+    for seed in range(20):
+        rng = random.Random(seed)
+        ops = [(rng.randrange(5), rng.randrange(64), rng.randrange(64))
+               for _ in range(60)]
+        _apply_ops(ops)
+
+
+def test_hypothesis_op_sequences_preserve_invariants():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    @hyp.given(st.lists(st.tuples(st.integers(0, 4),
+                                  st.integers(0, 63),
+                                  st.integers(0, 63)),
+                        max_size=80))
+    @hyp.settings(max_examples=150, deadline=None)
+    def prop(ops):
+        _apply_ops(ops)
+    prop()
