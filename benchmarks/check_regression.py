@@ -1,0 +1,175 @@
+"""CI benchmark-regression gate: compare a fresh bench JSON against the
+committed baseline with per-metric tolerances.
+
+The serving benches are tick-based and fully seeded, so their headline
+metrics (tokens/step, prefix-hit ratio, peak KV bytes, accept rate,
+memory savings) are DETERMINISTIC — identical on any machine — and can
+be gated tightly; wall-clock numbers are never compared. Tolerances
+exist so small intentional changes (a scheduler tweak shifting a tick)
+don't fail the gate, while real regressions (speculative speedup lost,
+prefix cache stops hitting, paged memory win evaporates) do.
+
+Direction semantics per metric:
+
+  higher  regression when current < baseline * (1 - tol)
+  lower   regression when current > baseline * (1 + tol)
+  equal   regression when current != baseline (invariants: bitwise
+          token parity flags, request counts)
+
+Improvements never fail the gate. To RATCHET a baseline after an
+intentional improvement, re-run the bench with ``--tiny --out`` and
+commit the refreshed ``results/*_tiny.json`` (full-size baselines come
+from the plain bench runs).
+
+  PYTHONPATH=src python benchmarks/check_regression.py \
+      --bench specdec --current ci-bench/specdec.json
+      [--baseline results/specdec_bench_tiny.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _row(data, **match):
+    for r in data["rows"]:
+        if all(r.get(k) == v for k, v in match.items()):
+            return r
+    raise KeyError(f"no row matching {match}")
+
+
+# ------------------------------------------------------- extractors ----
+# one per bench: loaded JSON -> {metric: value}; the SPECS table below
+# names the direction + tolerance for each extracted metric
+
+def _engine_metrics(d):
+    return {
+        "requests": d["requests"],
+        "generated_tokens": d["generated_tokens"],
+        "tokens_per_step": d["tokens_per_step"],
+        "kv_bytes_peak": d["kv_bytes_peak"],
+    }
+
+
+def _cluster_metrics(d):
+    aff = _row(d, policy="intent_affinity")
+    rr = _row(d, policy="round_robin")
+    return {
+        "affinity_prefix_hit": aff["prefix_hit"],
+        "affinity_beats_round_robin":
+            d["meta"]["affinity_beats_round_robin"],
+        "tokens_identical":
+            d["meta"]["tokens_identical_across_policies"],
+        "tokens_out": rr["tokens_out"],
+        "affinity_sla": aff["sla"],
+    }
+
+
+def _paging_metrics(d):
+    conc = _row(d, scenario="concurrency@budget", mode="paged")
+    mem = _row(d, scenario="memory@slots", mode="paged")
+    return {
+        "paged_memory_savings": d["meta"]["paged_memory_savings"],
+        "tokens_identical": d["meta"]["tokens_identical"],
+        "paged_peak_concurrent": conc["peak_concurrent"],
+        "paged_tokens_per_step": conc["tokens_per_step"],
+        "paged_kv_bytes_peak": mem["kv_bytes_peak"],
+    }
+
+
+def _specdec_metrics(d):
+    return {
+        "spec_speedup_skewed_greedy":
+            d["meta"]["spec_speedup_skewed_greedy"],
+        "spec_accept_skewed_greedy":
+            d["meta"]["spec_accept_skewed_greedy"],
+        "tokens_identical": d["meta"]["tokens_identical"],
+    }
+
+
+# (direction, relative tolerance) per metric; see the module docstring
+SPECS = {
+    "engine": (_engine_metrics, {
+        "requests": ("equal", 0.0),
+        "generated_tokens": ("higher", 0.1),
+        "tokens_per_step": ("higher", 0.1),
+        "kv_bytes_peak": ("lower", 0.1),
+    }),
+    "cluster": (_cluster_metrics, {
+        "affinity_prefix_hit": ("higher", 0.05),
+        "affinity_beats_round_robin": ("equal", 0.0),
+        "tokens_identical": ("equal", 0.0),
+        # volume, not invariant: a jaxlib bump can shift sampled ids
+        # (and thus eos timing) — the within-run parity flags above
+        # stay exact, the token volume just must not collapse
+        "tokens_out": ("higher", 0.1),
+        "affinity_sla": ("higher", 0.1),
+    }),
+    "paging": (_paging_metrics, {
+        "paged_memory_savings": ("higher", 0.1),
+        "tokens_identical": ("equal", 0.0),
+        "paged_peak_concurrent": ("higher", 0.0),
+        "paged_tokens_per_step": ("higher", 0.1),
+        "paged_kv_bytes_peak": ("lower", 0.1),
+    }),
+    "specdec": (_specdec_metrics, {
+        "spec_speedup_skewed_greedy": ("higher", 0.1),
+        "spec_accept_skewed_greedy": ("higher", 0.05),
+        "tokens_identical": ("equal", 0.0),
+    }),
+}
+
+
+def compare(bench: str, current: dict, baseline: dict):
+    """Returns (failures, report_lines) for one bench pair."""
+    extract, spec = SPECS[bench]
+    cur, base = extract(current), extract(baseline)
+    failures, lines = [], []
+    for name, (direction, tol) in spec.items():
+        c, b = cur[name], base[name]
+        if direction == "equal":
+            ok = c == b
+        elif direction == "higher":
+            ok = float(c) >= float(b) * (1.0 - tol)
+        else:                                              # lower
+            ok = float(c) <= float(b) * (1.0 + tol)
+        status = "ok" if ok else "REGRESSION"
+        lines.append(f"  {name:28s} {direction:6s} tol={tol:<5} "
+                     f"base={b} cur={c}  {status}")
+        if not ok:
+            failures.append(name)
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", required=True, choices=sorted(SPECS))
+    ap.add_argument("--current", required=True,
+                    help="fresh bench JSON (e.g. from --tiny --out)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON (default: "
+                         "results/<bench>_bench_tiny.json)")
+    args = ap.parse_args(argv)
+    baseline_path = args.baseline or os.path.join(
+        RESULTS_DIR, f"{args.bench}_bench_tiny.json")
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    failures, lines = compare(args.bench, current, baseline)
+    print(f"{args.bench}_bench vs {os.path.relpath(baseline_path)}:")
+    print("\n".join(lines))
+    if failures:
+        print(f"FAIL: {len(failures)} regressed metric(s): "
+              f"{', '.join(failures)}")
+        return 1
+    print("PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

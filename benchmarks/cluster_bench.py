@@ -36,6 +36,7 @@ Writes results/cluster_bench.{json,md}.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -150,9 +151,20 @@ def write_results(rows, meta):
         json.dump({"meta": meta, "rows": rows}, f, indent=1)
 
 
-def main():
-    rows, meta = bench()
-    write_results(rows, meta)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke config (fewer replicas/sessions)")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON here instead of results/")
+    args = ap.parse_args(argv)
+    rows, meta = (bench(n_replicas=2, n_sessions=8, max_batch=2,
+                        cache_len=128) if args.tiny else bench())
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"meta": meta, "rows": rows}, f, indent=1)
+    elif not args.tiny:
+        write_results(rows, meta)
     for r in rows:
         print(f"{r['policy']:16s} hit={r['prefix_hit']:.3f} "
               f"ttft_p95={r['ttft_p95']:.0f} qwait_p95="

@@ -8,6 +8,7 @@ the real engine on the reduced planner config.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -22,12 +23,13 @@ from repro.serving.sampling import SamplerConfig
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
-def run(n_requests: int = 12, max_new: int = 16):
+def run(n_requests: int = 12, max_new: int = 16, cache_len: int = 256):
     cfg = get_smoke_config("planner-proxy-100m")
     params = init_params(jax.random.PRNGKey(0), cfg)
     n_params = count_params_analytic(cfg)
 
-    engine = InferenceEngine(cfg, params, max_batch=4, cache_len=256)
+    engine = InferenceEngine(cfg, params, max_batch=4,
+                             cache_len=cache_len)
     # warmup compile
     engine.add_request("warmup request", max_new_tokens=2)
     engine.run_until_done()
@@ -55,17 +57,36 @@ def run(n_requests: int = 12, max_new: int = 16):
         "prefill_flops_per_task": flops_per_task,
         # GeckOpt link: ~26% fewer tokens/task (table2) => same fraction
         # of prefill FLOPs saved per task on the serving fleet.
+        # deterministic engine counters (seeded rng, tick-based): the
+        # CI bench-regression gate compares these, never wall-clock
+        "generated_tokens": gen_tokens,
+        "decode_steps": st["decode_steps"],
+        "tokens_per_step": st["tokens_per_step"],
+        "kv_bytes_peak": st["kv_bytes_peak"],
     }
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, "engine_bench.json"), "w") as f:
-        json.dump(out, f, indent=1)
     return out
 
 
-def main():
-    out = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke config (fewer, shorter requests)")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON here instead of results/")
+    args = ap.parse_args(argv)
+    out = (run(n_requests=4, max_new=6, cache_len=192) if args.tiny
+           else run())
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+    elif not args.tiny:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(os.path.join(RESULTS_DIR, "engine_bench.json"),
+                  "w") as f:
+            json.dump(out, f, indent=1)
     print(f"engine: {out['requests']} reqs in {out['wall_s']}s, "
           f"{out['decode_tok_per_s']} decode tok/s, "
+          f"{out['tokens_per_step']} tok/step, "
           f"{out['prefill_flops_per_task']:.2e} prefill FLOPs/task")
     return out
 

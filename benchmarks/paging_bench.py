@@ -194,14 +194,20 @@ def write_results(rows, meta):
         json.dump({"meta": meta, "rows": rows}, f, indent=1)
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke config (small pool, few sessions); "
                          "skips writing results/")
-    args = ap.parse_args()
+    ap.add_argument("--out", default=None,
+                    help="write the JSON here instead of results/ "
+                         "(used by the CI bench-regression gate)")
+    args = ap.parse_args(argv)
     rows, meta = bench(tiny=args.tiny)
-    if not args.tiny:
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"meta": meta, "rows": rows}, f, indent=1)
+    elif not args.tiny:
         write_results(rows, meta)
     for r in rows:
         print(f"{r['scenario']:19s} {r['mode']:5s} slots={r['slots']:2d} "

@@ -48,7 +48,7 @@ def main() -> None:
     lines.append(f"gating,wall_s,{time.time()-t0:.1f}")
 
     t0 = time.time()
-    eb = engine_bench.main()
+    eb = engine_bench.main(argv=[])
     lines.append(f"engine,decode_tok_per_s,{eb['decode_tok_per_s']}")
     lines.append(f"engine,wall_s,{time.time()-t0:.1f}")
 

@@ -1,0 +1,265 @@
+"""Speculative-decoding benchmark: tokens per target forward and draft
+acceptance across intent mixes, KV modes and kernel backends.
+
+Every engine decode step is one target-model forward — the unit the
+whole serving stack is billed in. Non-speculative decoding emits at
+most one token per busy slot per forward; with ``spec_decode`` the
+engine drafts K cheap tokens per slot and verifies them all in ONE
+target forward, so ``tokens_per_step`` (tokens / target forwards)
+multiplies by the acceptance rate. GeckOpt's intent gating makes
+traffic skew onto hot intents with predictable completions — the
+regime where a small draft agrees with the target most; the repo ships
+no trained weights to distill a draft from, so the bench instantiates
+the draft WITH the target's weights (the perfect-agreement stand-in:
+greedy acceptance is 1.0 by construction, and the T=0.8 rows show how
+sampled verification prices disagreement).
+
+Every (mix, temperature, kv_mode, backend) scenario runs a baseline
+engine and a speculative engine over the SAME seeded traffic and
+asserts BITWISE-equal outputs and finish reasons — the sample-and-match
+acceptance rule (serving/specdec.py) makes speculative decoding a pure
+performance lever, never a quality one. The headline row (skewed mix,
+greedy, dense, reference) must clear 1.5x baseline tokens/step.
+
+Writes results/specdec_bench.{json,md}.
+
+  PYTHONPATH=src python benchmarks/specdec_bench.py [--tiny] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+COLUMNS = ("mix", "T", "kv", "backend", "mode", "tokens_per_step",
+           "accept_rate", "speedup", "tokens_out", "steps",
+           "tokens_equal")
+
+N_INTENTS = 4
+PREFIX_LEN = 24
+SUFFIX_LEN = 6
+
+
+def _traffic(mix: str, n_sessions: int):
+    """Deterministic session list: (prompt ids, prefix key) per session.
+    ``skewed`` puts ~75% of sessions on intent 0 (the GeckOpt hot-intent
+    regime the cluster router exploits); ``uniform`` spreads evenly."""
+    prefixes = {i: list(range(10 + 40 * i, 10 + 40 * i + PREFIX_LEN))
+                for i in range(N_INTENTS)}
+    sessions = []
+    n_hot = (3 * n_sessions) // 4
+    for s in range(n_sessions):
+        intent = (0 if mix == "skewed" and s < n_hot
+                  else s % N_INTENTS)
+        suffix = list(range(1000 + SUFFIX_LEN * s,
+                            1000 + SUFFIX_LEN * (s + 1)))
+        sessions.append((prefixes[intent] + suffix, f"intent:{intent}"))
+    return prefixes, sessions
+
+
+def _drive(eng, sessions, max_new: int, temperature: float):
+    from repro.serving.sampling import SamplerConfig
+    rid_to_idx = {}
+    for i, (ids, key) in enumerate(sessions):
+        rid = eng.add_request(
+            ids, max_new_tokens=max_new,
+            sampler=SamplerConfig(temperature=temperature,
+                                  top_k=40 if temperature else 0,
+                                  seed=77_000 + i),
+            prefix_key=key)
+        rid_to_idx[rid] = i
+    t0 = time.time()
+    done = eng.run_until_done()
+    wall = time.time() - t0
+    st = eng.throughput_stats()
+    outputs = {rid_to_idx[r.request_id]: (tuple(r.output),
+                                          r.finish_reason)
+               for r in done}
+    return outputs, st, wall
+
+
+def bench(tiny: bool = False):
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models.model import init_params
+    from repro.serving.engine import InferenceEngine
+    from repro.serving.specdec import SpecConfig
+
+    cfg = get_smoke_config("planner-proxy-100m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    spec_k = 4
+
+    if tiny:
+        n_sessions, max_new, max_batch, cache_len = 6, 10, 2, 128
+        n_pallas = 3
+    else:
+        n_sessions, max_new, max_batch, cache_len = 16, 20, 4, 256
+        n_pallas = 6
+    bs = 16
+    kv_blocks = max_batch * cache_len // bs
+
+    spec = SpecConfig(draft_cfg=cfg, draft_params=params, k=spec_k)
+    # share jitted step closures across same-shape engines: the bench
+    # builds ~20 engines and must compile each step once, not 20x.
+    # Two donor pools per backend — the engine steps (shared by all)
+    # and the spec-only verify/draft steps (shared by spec engines)
+    compiled = {}
+    compiled_spec = {}
+
+    def engine(kv, backend, with_spec):
+        kw = ({"kv_blocks": kv_blocks, "block_size": bs}
+              if kv == "paged" else {})
+        eng = InferenceEngine(cfg, params, max_batch=max_batch,
+                              cache_len=cache_len, kv_mode=kv,
+                              backend=backend,
+                              spec_decode=spec if with_spec else None,
+                              **kw)
+        donor = compiled.get(eng.backend)
+        if donor is None:
+            compiled[eng.backend] = eng
+        else:
+            eng._prefill, eng._decode, eng._extend = \
+                donor._prefill, donor._decode, donor._extend
+        if with_spec:
+            sdonor = compiled_spec.get(eng.backend)
+            if sdonor is None:
+                compiled_spec[eng.backend] = eng
+            else:
+                eng._verify = sdonor._verify
+                eng.spec.share_compiled(sdonor.spec)
+        return eng
+
+    rows = []
+
+    def scenario(mix, temperature, kv, backend, n=None):
+        prefixes, sessions = _traffic(mix, n or n_sessions)
+        results = {}
+        for mode in ("baseline", "spec"):
+            eng = engine(kv, backend, mode == "spec")
+            for i, pref in prefixes.items():
+                eng.register_prefix(f"intent:{i}", pref)
+            outputs, st, wall = _drive(eng, sessions, max_new,
+                                       temperature)
+            results[mode] = (outputs, st, wall)
+        (b_out, b_st, b_wall), (s_out, s_st, s_wall) = \
+            results["baseline"], results["spec"]
+        equal = b_out == s_out
+        if not equal:
+            raise AssertionError(
+                f"speculative decoding diverged from the baseline on "
+                f"({mix}, T={temperature}, {kv}, {backend}) — the "
+                f"sample-and-match acceptance broke bitwise parity")
+        speedup = round(s_st["tokens_per_step"]
+                        / max(b_st["tokens_per_step"], 1e-9), 4)
+        for mode, (out, st, wall) in results.items():
+            rows.append({
+                "mix": mix, "T": temperature, "kv": kv,
+                "backend": backend, "mode": mode,
+                "tokens_per_step": st["tokens_per_step"],
+                "accept_rate": (st["spec_accept_rate"]
+                                if mode == "spec" else ""),
+                "speedup": speedup if mode == "spec" else "",
+                "tokens_out": sum(len(o) for o, _ in out.values()),
+                "steps": st["decode_steps"],
+                "rounds": st["spec_rounds"],
+                "tokens_equal": equal,
+                "wall_s": round(wall, 2),
+            })
+        return speedup, s_st["spec_accept_rate"]
+
+    headline, headline_accept = scenario("skewed", 0.0, "dense",
+                                         "reference")
+    scenario("skewed", 0.0, "paged", "reference")
+    scenario("uniform", 0.0, "dense", "reference")
+    scenario("skewed", 0.8, "dense", "reference")
+    scenario("skewed", 0.8, "paged", "reference")
+    # pallas smoke pair (interpret mode on CPU — small but real): the
+    # flash_verify kernels must stay bitwise-parity too
+    scenario("skewed", 0.0, "dense", "pallas", n=n_pallas)
+    scenario("skewed", 0.0, "paged", "pallas", n=n_pallas)
+
+    meta = {
+        "tiny": tiny, "spec_k": spec_k, "n_sessions": n_sessions,
+        "max_new_tokens": max_new, "max_batch": max_batch,
+        "cache_len": cache_len, "block_size": bs,
+        "kv_blocks": kv_blocks,
+        "spec_speedup_skewed_greedy": headline,
+        "spec_accept_skewed_greedy": headline_accept,
+        "tokens_identical": all(r["tokens_equal"] for r in rows),
+    }
+    if headline <= 1.5:
+        raise AssertionError(
+            f"speculative tokens/step speedup {headline} <= 1.5x on "
+            f"the skewed greedy mix — the draft-verify loop is not "
+            f"paying for itself")
+    return rows, meta
+
+
+def write_results(rows, meta, path=None):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    md = ["# specdec_bench — draft-verify speculative decoding",
+          "",
+          f"{meta['n_sessions']} sessions over {N_INTENTS} intent "
+          f"prefixes, k={meta['spec_k']} draft tokens/round, "
+          f"{meta['max_new_tokens']} new tokens each, "
+          f"{meta['max_batch']} slots, seeded samplers; draft shares "
+          f"the target's weights (perfect-agreement stand-in).", "",
+          "| " + " | ".join(COLUMNS) + " |",
+          "|" + "---|" * len(COLUMNS)]
+    for r in rows:
+        md.append("| " + " | ".join(str(r[c]) for c in COLUMNS) + " |")
+    md += ["",
+           f"- skewed-mix greedy speedup (tokens/target-forward): "
+           f"**{meta['spec_speedup_skewed_greedy']}x** "
+           f"(bar: > 1.5x)",
+           f"- bitwise-identical tokens + finish reasons in every "
+           f"scenario: **{meta['tokens_identical']}**",
+           "",
+           "Interpretation: at T=0 the self-draft always agrees, so "
+           "tokens/step approaches k+1 per busy slot — the upper bound "
+           "intent-skewed greedy planner traffic approaches with a "
+           "well-distilled draft. At T=0.8 the sample-and-match rule "
+           "only accepts drafts that equal the target's own seeded "
+           "sample, pricing verification exactness in acceptance: "
+           "tokens/step degrades toward 1x but NEVER below it, and "
+           "outputs stay bitwise identical. Paged and dense agree "
+           "throughout (rollback is pos truncation either way); the "
+           "pallas rows run the fused flash_verify kernels."]
+    with open(os.path.join(RESULTS_DIR, "specdec_bench.md"), "w") as f:
+        f.write("\n".join(md) + "\n")
+    out_json = path or os.path.join(RESULTS_DIR, "specdec_bench.json")
+    with open(out_json, "w") as f:
+        json.dump({"meta": meta, "rows": rows}, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke config (small pool, few sessions)")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON here instead of results/ "
+                         "(markdown is skipped); used by the CI "
+                         "bench-regression gate")
+    args = ap.parse_args()
+    rows, meta = bench(tiny=args.tiny)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"meta": meta, "rows": rows}, f, indent=1)
+    elif not args.tiny:
+        write_results(rows, meta)
+    for r in rows:
+        print(f"{r['mix']:8s} T={r['T']:.1f} {r['kv']:5s} "
+              f"{r['backend']:9s} {r['mode']:8s} "
+              f"tok/step={r['tokens_per_step']:7.3f} "
+              f"accept={str(r['accept_rate']):6s} "
+              f"speedup={str(r['speedup']):6s} equal={r['tokens_equal']}")
+    print(f"speedup_skewed_greedy={meta['spec_speedup_skewed_greedy']} "
+          f"tokens_identical={meta['tokens_identical']}")
+    return rows, meta
+
+
+if __name__ == "__main__":
+    main()

@@ -61,11 +61,26 @@ def main():
                          "(default: the dense budget)")
     ap.add_argument("--block-size", type=int, default=None,
                     help="paged: tokens per KV block (default: 16)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative decoding for planner turns: draft "
+                         "--draft-k tokens per slot, verify in one "
+                         "target forward (tokens stay bitwise "
+                         "identical; the draft shares the target's "
+                         "weights here)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens per speculative round (>= 1)")
     args = ap.parse_args()
+    if args.spec_decode and args.draft_k < 1:
+        ap.error(f"--spec-decode needs --draft-k >= 1, "
+                 f"got {args.draft_k}")
 
     # --- the serving fleet: engine(s) + one batched gate model -----------
     cfg = get_smoke_config("planner-proxy-100m")
     params = init_params(jax.random.PRNGKey(0), cfg)
+    from repro.serving.specdec import SpecConfig
+    spec = (SpecConfig(draft_cfg=cfg, draft_params=params,
+                       k=args.draft_k)
+            if args.spec_decode else None)
     # cache_len must hold the longest per-intent planner prefix (~2.5k
     # tokens of system prompt + catalog) plus the turn suffix
     if args.replicas > 1:
@@ -74,13 +89,15 @@ def main():
                                cache_len=4096, backend=args.backend,
                                kv_mode=args.kv_mode,
                                kv_blocks=args.kv_blocks,
-                               block_size=args.block_size)
+                               block_size=args.block_size,
+                               spec_decode=spec)
     else:
         engine = InferenceEngine(cfg, params, max_batch=4,
                                  cache_len=4096, backend=args.backend,
                                  kv_mode=args.kv_mode,
                                  kv_blocks=args.kv_blocks,
-                                 block_size=args.block_size)
+                                 block_size=args.block_size,
+                                 spec_decode=spec)
     classifier = BatchedNeuralIntentClassifier(cfg, params)
     print(f"planner engine up: {count_params_analytic(cfg)/1e6:.1f}M "
           f"params, {args.replicas} replica(s) x 4 slots; "
@@ -122,6 +139,11 @@ def main():
           + (f" | shared-block frac {es['kv_shared_frac']:.2f}, "
              f"{es['preemptions']} preemptions"
              if es["kv_mode"] == "paged" else ""))
+    if args.spec_decode:
+        print(f"spec-decode[k={args.draft_k}]: "
+              f"{es['tokens_per_step']:.2f} tokens/target-forward, "
+              f"accept rate {es['spec_accept_rate']:.2f} over "
+              f"{es['spec_rounds']} rounds")
     if args.replicas > 1:
         for r in es["per_replica"]:
             print(f"  replica {r['replica']}: {r['admissions']} turns, "

@@ -35,6 +35,7 @@ from repro.kernels import ref as R
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.flash_decode_paged import flash_decode_paged
 from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.flash_verify import flash_verify, flash_verify_paged
 from repro.kernels.mlstm_scan import mlstm_scan
 from repro.kernels.moe_router import moe_router_topk
 from repro.kernels.ssm_scan import ssm_scan
@@ -49,6 +50,10 @@ class KernelBackend:
       decode_attention(q, k_cache, v_cache, kv_len, *, cap, scale)
       paged_decode_attention(q, k_pages, v_pages, block_tab, kv_len, *,
                              cap, scale)
+      verify_attention(q (B,Hq,W,hd), k_cache, v_cache, kv_len, *,
+                       cap, scale)
+      paged_verify_attention(q (B,Hq,W,hd), k_pages, v_pages, block_tab,
+                             kv_len, *, cap, scale)
       router_topk(logits (T,E), k) -> (weights (T,k) fp32, idx (T,k) i32)
       selective_scan(dt, x, B_, C_, A, h0) -> (y, h_last)
       mlstm_scan(q, k, v, i_pre, f_pre, state, *, scale) -> (h, state)
@@ -57,6 +62,8 @@ class KernelBackend:
     attention: Callable
     decode_attention: Callable
     paged_decode_attention: Callable
+    verify_attention: Callable
+    paged_verify_attention: Callable
     router_topk: Callable
     selective_scan: Callable
     mlstm_scan: Callable
@@ -123,6 +130,8 @@ register_backend(KernelBackend(
     attention=R.attention_ref,
     decode_attention=R.decode_attention_ref,
     paged_decode_attention=R.paged_decode_attention_ref,
+    verify_attention=R.verify_attention_ref,
+    paged_verify_attention=R.paged_verify_attention_ref,
     router_topk=_ref_router_topk,
     selective_scan=R.selective_scan_ref,
     mlstm_scan=R.mlstm_scan_ref,
@@ -155,6 +164,19 @@ def _pl_paged_decode_attention(q, k_pages, v_pages, block_tab, kv_len, *,
                               interpret=_interpret())
 
 
+def _pl_verify_attention(q, k_cache, v_cache, kv_len, *, cap=0.0,
+                         scale=0.0):
+    return flash_verify(q, k_cache, v_cache, kv_len, cap=cap, scale=scale,
+                        interpret=_interpret())
+
+
+def _pl_paged_verify_attention(q, k_pages, v_pages, block_tab, kv_len, *,
+                               cap=0.0, scale=0.0):
+    return flash_verify_paged(q, k_pages, v_pages, block_tab, kv_len,
+                              cap=cap, scale=scale,
+                              interpret=_interpret())
+
+
 def _pl_router_topk(logits, k: int):
     return moe_router_topk(logits, k, interpret=_interpret())
 
@@ -173,6 +195,8 @@ register_backend(KernelBackend(
     attention=_pl_attention,
     decode_attention=_pl_decode_attention,
     paged_decode_attention=_pl_paged_decode_attention,
+    verify_attention=_pl_verify_attention,
+    paged_verify_attention=_pl_paged_verify_attention,
     router_topk=_pl_router_topk,
     selective_scan=_pl_selective_scan,
     mlstm_scan=_pl_mlstm_scan,

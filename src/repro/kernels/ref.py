@@ -86,6 +86,32 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tab, kv_len, *,
                                 kv_len, cap=cap, scale=scale)
 
 
+def verify_attention_ref(q, k_cache, v_cache, kv_len, *, cap=0.0,
+                         scale=0.0):
+    """Speculative-verify attention: W query rows per sequence against a
+    (partially) filled cache, causal at per-sequence offsets.
+
+    q: (B,Hq,W,hd); caches: (B,Hkv,Sc,hd); kv_len: (B,) int — valid
+    rows AFTER the verify write, so query row r sits at absolute
+    position kv_len - W + r and attends kv positions <= that (exactly
+    the mask a single-token decode at the same position would use).
+    Returns (B,Hq,W,hd).
+    """
+    return attention_ref(q, k_cache, v_cache, causal=True, cap=cap,
+                         kv_len=kv_len, scale=scale)
+
+
+def paged_verify_attention_ref(q, k_pages, v_pages, block_tab, kv_len, *,
+                               cap=0.0, scale=0.0):
+    """Speculative-verify attention over scattered KV blocks (gather
+    oracle). q: (B,Hq,W,hd); pages: (n_blocks,Hkv,bs,hd); block_tab:
+    (B,mb) int32; kv_len: (B,) valid rows after the verify write.
+    Returns (B,Hq,W,hd)."""
+    return verify_attention_ref(q, paged_gather_kv(k_pages, block_tab),
+                                paged_gather_kv(v_pages, block_tab),
+                                kv_len, cap=cap, scale=scale)
+
+
 def router_topk_ref(logits, k: int):
     """logits: (T,E) -> (weights (T,k), idx (T,k), probs (T,E))."""
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)

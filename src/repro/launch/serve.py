@@ -9,6 +9,16 @@ instead, and reports cluster-level tick metrics:
 
   PYTHONPATH=src python -m repro.launch.serve --smoke --replicas 4 \
       --router intent_affinity --requests 32 --profile bursty --skew 0.7
+
+``--spec-decode`` turns on speculative decoding (serving/specdec.py):
+the engine drafts ``--draft-k`` greedy tokens per slot and verifies
+them in one target forward, emitting a multiple of the tokens per
+target forward with tokens bitwise identical to non-speculative
+decoding (unconditionally at T=0; at any temperature for seeded
+requests — DESIGN.md §Speculative decoding). The launcher has no trained draft
+checkpoint to load, so the draft shares the target's weights — the
+perfect-agreement stand-in the benches use; point a real deployment's
+``SpecConfig`` at a distilled ``planner_proxy_100m``-class draft.
 """
 from __future__ import annotations
 
@@ -22,6 +32,7 @@ from repro.models.model import init_params
 from repro.serving.cluster import ROUTER_POLICIES, EngineCluster
 from repro.serving.engine import InferenceEngine
 from repro.serving.sampling import SamplerConfig
+from repro.serving.specdec import SpecConfig
 from repro.serving.workload import (PROFILES, WorkloadConfig,
                                     make_workload,
                                     register_workload_prefixes,
@@ -29,7 +40,7 @@ from repro.serving.workload import (PROFILES, WorkloadConfig,
 from repro.training.checkpoint import load_checkpoint
 
 
-def serve_cluster(cfg, params, args):
+def serve_cluster(cfg, params, args, spec_decode=None):
     cluster = EngineCluster(cfg, params, args.replicas,
                             router=args.router,
                             max_batch=args.max_batch,
@@ -37,7 +48,8 @@ def serve_cluster(cfg, params, args):
                             backend=args.backend,
                             kv_mode=args.kv_mode,
                             kv_blocks=args.kv_blocks,
-                            block_size=args.block_size)
+                            block_size=args.block_size,
+                            spec_decode=spec_decode)
     mix = (skewed_mix(hot_frac=args.skew) if args.skew > 0
            else uniform_mix())
     reqs = make_workload(WorkloadConfig(
@@ -58,6 +70,11 @@ def serve_cluster(cfg, params, args):
           f"SLA {100 * s['sla_attainment']:.1f}%")
     print(f"prefix-hit ratio {s['prefix_hit_ratio']:.2f} | "
           f"{s['tokens_out']} tokens out")
+    if spec_decode is not None:
+        print(f"spec-decode[k={spec_decode.k}]: "
+              f"{s['tokens_per_step']:.2f} tokens/target-forward over "
+              f"{s['spec_rounds']} rounds, accept rate "
+              f"{s['spec_accept_rate']:.2f}")
     kv_line = (f"kv[{args.kv_mode}]: peak "
                f"{s['kv_bytes_peak'] / 2**20:.1f} MiB of "
                f"{s['kv_bytes_allocated'] / 2**20:.1f} MiB")
@@ -72,7 +89,7 @@ def serve_cluster(cfg, params, args):
               f"hit {r['hit_ratio']:.2f}, util {r['utilization']:.2f}")
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="planner-proxy-100m")
     ap.add_argument("--smoke", action="store_true")
@@ -105,18 +122,55 @@ def main():
                          "(0 = uniform mix, 1 = all hot)")
     ap.add_argument("--turns", type=int, default=1,
                     help="max turns per session (cluster mode)")
-    args = ap.parse_args()
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative decoding: draft --draft-k greedy "
+                         "tokens per slot with a draft model sharing "
+                         "the target's weights, verify them in one "
+                         "target forward (tokens bitwise-identical to "
+                         "non-speculative decoding at --temperature 0, "
+                         "and at any temperature for seeded requests — "
+                         "the cluster workload path; unseeded T>0 "
+                         "engine-stream sampling draws a different key "
+                         "schedule, like any co-tenancy change)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens per speculative round (>= 1)")
+    return ap
+
+
+def validate_args(ap: argparse.ArgumentParser, args):
+    """CLI-level invalid-combination errors, raised before any model is
+    built (mirrors the engine constructors' refusals)."""
     if not 0.0 <= args.skew <= 1.0:
         ap.error(f"--skew must be in [0, 1], got {args.skew}")
+    if args.kv_mode == "dense" and (args.kv_blocks is not None
+                                    or args.block_size is not None):
+        ap.error("--kv-blocks/--block-size apply only to "
+                 "--kv-mode paged")
+    if args.spec_decode and args.draft_k < 1:
+        ap.error(f"--spec-decode needs --draft-k >= 1, "
+                 f"got {args.draft_k}")
+    if args.replicas < 1:
+        ap.error(f"--replicas must be >= 1, got {args.replicas}")
+    return args
+
+
+def main(argv=None):
+    ap = build_parser()
+    args = validate_args(ap, ap.parse_args(argv))
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch))
     params = init_params(jax.random.PRNGKey(0), cfg)
     if args.checkpoint:
         params = load_checkpoint(args.checkpoint, params)
+    # no trained draft checkpoint ships with the repo: self-draft
+    # (perfect agreement) stands in for a distilled small model
+    spec = (SpecConfig(draft_cfg=cfg, draft_params=params,
+                       k=args.draft_k)
+            if args.spec_decode else None)
 
     if args.replicas > 1:
-        serve_cluster(cfg, params, args)
+        serve_cluster(cfg, params, args, spec_decode=spec)
         return
 
     engine = InferenceEngine(cfg, params, max_batch=args.max_batch,
@@ -124,7 +178,8 @@ def main():
                              backend=args.backend,
                              kv_mode=args.kv_mode,
                              kv_blocks=args.kv_blocks,
-                             block_size=args.block_size)
+                             block_size=args.block_size,
+                             spec_decode=spec)
     prompts = [
         f"Plot xview1 images around Tampa Bay with cloud cover below "
         f"{10 + i}%" for i in range(args.requests)]
@@ -139,6 +194,11 @@ def main():
     print(f"served {len(done)} requests in {dt:.2f}s | "
           f"decode steps {st['decode_steps']} | "
           f"{st['tokens_generated'] / max(dt, 1e-9):.1f} tok/s")
+    if spec is not None:
+        print(f"spec-decode[k={spec.k}]: {st['tokens_per_step']:.2f} "
+              f"tokens/target-forward, accept rate "
+              f"{st['spec_accept_rate']:.2f} over "
+              f"{st['spec_rounds']} rounds")
     print(f"kv[{st['kv_mode']}]: peak {st['kv_bytes_peak'] / 2**20:.1f} "
           f"MiB of {st['kv_bytes_allocated'] / 2**20:.1f} MiB allocated"
           + (f" | {st['preemptions']} preemptions"

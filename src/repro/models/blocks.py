@@ -11,6 +11,14 @@ kind vocabulary). ``block_apply`` is pure and mode-polymorphic:
                  [pos, pos+S) and attends with q_offset=pos; full
                  attention + recurrent-state kinds only — the
                  sliding-window ring buffer has no multi-token write)
+  mode="verify"  batched multi-token speculative verify: scores W = K+1
+                 positions per slot against a continuous-batching cache
+                 with per-slot (B,) fill levels — writes W rows at
+                 [pos_b, pos_b+W) per slot and attends causally at
+                 per-slot offsets; pure-attention kinds only, dense or
+                 paged storage. Rows past a slot's logical capacity are
+                 dropped, so rejected-token rollback is a host-side
+                 pos truncation (DESIGN.md §Speculative decoding)
 
 Caches are dicts of arrays sized by ``cache_len`` (full-attention kinds) or
 ``cfg.window`` (sliding-window kinds — ring buffers indexed by pos % W).
@@ -155,6 +163,71 @@ def _paged_decode(ap, q, k, v, cfg, cache, pos, block_tab, backend=None):
     return L.out_proj(ap, out), {"k": nk, "v": nv}
 
 
+def _paged_verify(ap, q, k, v, cfg, cache, pos, block_tab, backend=None):
+    """Multi-token speculative verify against a paged KV pool.
+
+    q/k/v: (B, H, W, hd) — W = K+1 verify rows per slot at per-slot
+    positions [pos_b, pos_b+W). Each row lands in block
+    ``block_tab[b, (pos_b+i) // bs]`` with the same fp32 one-hot blend
+    as ``_paged_decode`` (sequential over the W rows, so consecutive
+    rows of one slot compose through the same block exactly as W decode
+    steps would); rows at or past the logical view (or of slots with
+    sentinel tables) are dropped. The reference read is dense verify
+    attention over the gathered logical view; a non-reference backend
+    reads the scattered blocks directly via the block-table-prefetching
+    flash_verify_paged kernel."""
+    from repro.kernels import backend as KB
+    from repro.kernels.ref import paged_gather_kv
+    nb, Hkv, bs, hd = cache["k"].shape
+    mb = block_tab.shape[1]
+    W = k.shape[2]
+    nk, nv = cache["k"], cache["v"]
+    for i in range(W):                       # W is a static python int
+        p_i = pos + i                                              # (B,)
+        j = jnp.minimum(p_i // bs, mb - 1)
+        bidx = jnp.take_along_axis(block_tab, j[:, None], axis=1)[:, 0]
+        # rows past the logical capacity write nowhere (sentinel drop)
+        bidx = jnp.where(p_i < mb * bs, bidx, nb)
+        oh = jax.nn.one_hot(p_i % bs, bs,
+                            dtype=jnp.float32)[:, None, :, None]
+        safe = jnp.clip(bidx, 0, nb - 1)
+        blk_k = jnp.take(nk, safe, axis=0)             # (B, Hkv, bs, hd)
+        blk_v = jnp.take(nv, safe, axis=0)
+        row_k = k[:, :, i:i + 1].astype(jnp.float32)
+        row_v = v[:, :, i:i + 1].astype(jnp.float32)
+        new_k = (blk_k * (1 - oh) + row_k * oh).astype(jnp.bfloat16)
+        new_v = (blk_v * (1 - oh) + row_v * oh).astype(jnp.bfloat16)
+        nk = nk.at[bidx].set(new_k, mode="drop")
+        nv = nv.at[bidx].set(new_v, mode="drop")
+    be = KB.get_backend(backend)
+    if be.name != "reference" and KB.mesh_local():
+        out = be.paged_verify_attention(
+            q, nk, nv, block_tab, pos + W,
+            cap=cfg.attn_softcap, scale=cfg.attn_scale)
+    else:
+        out = _verify_rows(q, paged_gather_kv(nk, block_tab),
+                           paged_gather_kv(nv, block_tab), cfg, pos,
+                           backend=backend)
+    return L.out_proj(ap, out), {"k": nk, "v": nv}
+
+
+def _verify_rows(q, nk, nv, cfg, pos, backend=None):
+    """Reference verify read: W per-row decode-shaped attention calls
+    (row r attends kv_len = pos + r + 1, causal=False — EXACTLY the
+    call a single-token decode at that position makes). One fused
+    W-row attention would be mathematically identical but not bitwise:
+    the score einsum's reduction order is shape-sensitive on the q
+    axis, and the engine's parity contract is bitwise. W = K+1 is
+    small, so the W calls cost little; the fused read lives in the
+    flash_verify kernels for non-reference backends."""
+    W = q.shape[2]
+    outs = [L.attention(q[:, :, r:r + 1], nk, nv, causal=False,
+                        kv_len=pos + r + 1, cap=cfg.attn_softcap,
+                        scale=cfg.attn_scale, backend=backend)
+            for r in range(W)]
+    return jnp.concatenate(outs, axis=2)
+
+
 def _attn_sublayer(p, x, cfg, kind, mode, cache, pos, positions, cross=False,
                    memory=None, backend=None, block_tab=None):
     """Shared attention sub-layer. Returns (y, new_cache_kv)."""
@@ -225,6 +298,45 @@ def _attn_sublayer(p, x, cfg, kind, mode, cache, pos, positions, cross=False,
         out = L.attention(q, nk, nv, causal=True, q_offset=pos,
                           cap=cfg.attn_softcap, scale=cfg.attn_scale,
                           backend=backend)
+        return L.out_proj(ap, out), {"k": nk, "v": nv}
+
+    if mode == "verify":
+        # speculative verify: W rows per slot at per-slot (B,) fill
+        # levels. Writes are one-hot blends at rows [pos_b, pos_b+W)
+        # (out-of-range rows one-hot to zeros and drop — host-side pos
+        # truncation then IS the rejected-token rollback); reads use
+        # per-slot kv_len = pos + r + 1 per row, so query row r keeps
+        # its true position pos_b + r even when the window overhangs
+        # the cache end (the engine never emits tokens from overhanging
+        # rows).
+        if window:
+            raise NotImplementedError(
+                "verify over sliding-window ring buffers")
+        if block_tab is not None:
+            return _paged_verify(ap, q, k, v, cfg, cache, pos, block_tab,
+                                 backend=backend)
+        from repro.kernels import backend as KB
+        Sc = cache["k"].shape[2]
+        W = k.shape[2]
+        rows = pos[:, None] + jnp.arange(W)[None, :]            # (B, W)
+        oh = jax.nn.one_hot(rows, Sc, dtype=jnp.float32)        # (B,W,Sc)
+        written = jnp.sum(oh, axis=1)[:, None, :, None]         # (B,1,Sc,1)
+
+        def scatter(cache_leaf, new):
+            upd = jnp.einsum("bws,bhwd->bhsd", oh,
+                             new.astype(jnp.float32))
+            return (cache_leaf * (1.0 - written) + upd
+                    ).astype(jnp.bfloat16)
+
+        nk = scatter(cache["k"], k)
+        nv = scatter(cache["v"], v)
+        be = KB.get_backend(backend)
+        if be.name != "reference" and KB.mesh_local():
+            out = be.verify_attention(q, nk, nv, pos + W,
+                                      cap=cfg.attn_softcap,
+                                      scale=cfg.attn_scale)
+        else:
+            out = _verify_rows(q, nk, nv, cfg, pos, backend=backend)
         return L.out_proj(ap, out), {"k": nk, "v": nv}
 
     # decode: x is (B,1,d); write k/v at slot, attend over valid entries.

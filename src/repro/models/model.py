@@ -306,6 +306,45 @@ def prefill_extend(params, cfg: ModelConfig, cache, batch, n_valid=None,
     return logits, {"segments": new_segs, "pos": pos + n_valid}
 
 
+def verify_extend(params, cfg: ModelConfig, cache, batch, backend=None):
+    """Speculative-decode verify: score W = K+1 draft positions per slot
+    in ONE forward against a continuous-batching cache with per-slot
+    (B,) fill levels.
+
+    batch["tokens"]: (B, W) — per slot, the carried last token followed
+    by its K draft proposals. Returns logits for ALL W positions
+    ((B, W, V) fp32 — row i is the target distribution for the token
+    after batch["tokens"][:, :i+1]) plus the cache with the W KV rows
+    written at [pos_b, pos_b+W). ``pos`` is returned UNCHANGED: the
+    engine advances each slot by its accepted length on the host, and
+    that truncation is the whole rejected-token rollback (dropped rows
+    are masked in dense storage and overwritten in paged blocks before
+    ever becoming visible). Works against dense and paged caches (a
+    ``block_tab`` rides through like decode_step); pure-attention
+    stacks only — recurrent state cannot be rolled back by truncation.
+    """
+    assert not cfg.n_enc_layers, "verify_extend: enc-dec unsupported"
+    pos = cache["pos"]
+    tab = cache.get("block_tab")
+    x, positions = _embed_inputs(params, cfg, batch, pos=pos)
+    x, new_segs, _ = _apply_stack(params, cfg, x, mode="verify",
+                                  cache=cache, pos=pos,
+                                  positions=positions, backend=backend,
+                                  block_tab=tab)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    # per-row head matmuls, not one (B,W,d)@(d,V): the tied-embedding
+    # head is a transposed operand whose gemm reduction order is
+    # shape-sensitive on the row axis — decode emits from (B,1,d)
+    # calls, and verify logits must match them BITWISE, not allclose
+    W = x.shape[1]
+    logits = jnp.stack([_logits(params, cfg, x[:, i:i + 1])[:, 0]
+                        for i in range(W)], axis=1)         # (B, W, V)
+    out = {"segments": new_segs, "pos": pos}
+    if tab is not None:
+        out["block_tab"] = tab
+    return logits, out
+
+
 def decode_step(params, cfg: ModelConfig, cache, batch, backend=None):
     """One decode step. batch["tokens"]: (B,1). Returns (logits, cache).
 

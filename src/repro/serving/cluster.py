@@ -200,6 +200,15 @@ class ClusterStats:
                for t in self.traces if t.sla_ticks is not None]
         adm = sum(r["admissions"] for r in self.per_replica)
         hits = sum(r["prefix_hits"] for r in self.per_replica)
+        # speculative decoding: fleet accept rate and tokens per target
+        # forward (== mean busy slots without spec; grows with accepted
+        # drafts when spec decode is on)
+        steps = sum(r["decode_steps"] for r in self.per_replica)
+        toks = sum(r["tokens_generated"] for r in self.per_replica)
+        drafted = sum(r.get("spec_drafted", 0)
+                      for r in self.per_replica)
+        accepted = sum(r.get("spec_accepted", 0)
+                       for r in self.per_replica)
         # KV-memory accounting (engine.kv_memory_stats per replica):
         # fleet-wide peak bytes, preemption pressure and the
         # shared-vs-owned block split of the paged pools — peak-based,
@@ -221,8 +230,12 @@ class ClusterStats:
                                if sla else 1.0),
             "tokens_out": sum(len(t.request.output) for t in done
                               if t.request is not None),
-            "tokens_decoded": sum(r["tokens_generated"]
-                                  for r in self.per_replica),
+            "tokens_decoded": toks,
+            "decode_steps": steps,
+            "tokens_per_step": round(toks / max(steps, 1), 4),
+            "spec_rounds": sum(r.get("spec_rounds", 0)
+                               for r in self.per_replica),
+            "spec_accept_rate": round(accepted / max(drafted, 1), 4),
             "kv_bytes_allocated": sum(r.get("kv_bytes_allocated", 0)
                                       for r in self.per_replica),
             "kv_bytes_peak": sum(r.get("kv_bytes_peak", 0)
@@ -251,19 +264,20 @@ class EngineCluster:
                  backend: Optional[str] = None,
                  kv_mode: Optional[str] = None,
                  kv_blocks: Optional[int] = None,
-                 block_size: Optional[int] = None):
+                 block_size: Optional[int] = None,
+                 spec_decode=None):
         if engines is not None:
             # prebuilt replicas keep their own configuration; sizing
             # kwargs would be silently dropped, so refuse them
             if any(v is not None for v in (cfg, params, max_batch,
                                            cache_len, seed, backend,
                                            kv_mode, kv_blocks,
-                                           block_size)):
+                                           block_size, spec_decode)):
                 raise ValueError(
                     "engines= is mutually exclusive with cfg/params/"
                     "max_batch/cache_len/seed/backend/kv_mode/"
-                    "kv_blocks/block_size (prebuilt replicas keep "
-                    "their own configuration)")
+                    "kv_blocks/block_size/spec_decode (prebuilt "
+                    "replicas keep their own configuration)")
             self.replicas = list(engines)
         else:
             assert cfg is not None and params is not None
@@ -277,17 +291,22 @@ class EngineCluster:
                                     cache_len=cache_len, seed=seed + i,
                                     backend=backend, kv_mode=kv_mode,
                                     kv_blocks=kv_blocks,
-                                    block_size=block_size)
+                                    block_size=block_size,
+                                    spec_decode=spec_decode)
                 if self.replicas:
                     # identical (cfg, cache_len, backend) closures =>
                     # replicas share one jit cache: compile once, not N×
                     e0 = self.replicas[0]
                     e._prefill, e._decode, e._extend = \
                         e0._prefill, e0._decode, e0._extend
+                    if e.spec is not None:
+                        e._verify = e0._verify
+                        e.spec.share_compiled(e0.spec)
                 self.replicas.append(e)
         self.router = make_router(router, spill_load=spill_load)
         self.backend = self.replicas[0].backend
         self.kv_mode = self.replicas[0].kv_mode
+        self.spec_k = self.replicas[0].spec_k
         self.tick = 0
         self.traces: Dict[Tuple[int, int], RequestTrace] = {}
         self._next_session = 0
@@ -510,6 +529,11 @@ class EngineCluster:
         agg["kv_shared_frac"] = round(
             sum(m["kv_blocks_shared_peak"] for m in kv)
             / max(sum(m["kv_blocks_used_peak"] for m in kv), 1), 4)
+        agg["tokens_per_step"] = round(
+            agg["tokens_generated"] / max(agg["decode_steps"], 1), 4)
+        agg["spec_accept_rate"] = round(
+            agg["spec_accepted"] / max(agg["spec_drafted"], 1), 4)
+        agg["spec_k"] = self.spec_k
         agg["per_replica"] = [dict(e.stats, **m, replica=i)
                               for i, (e, m) in enumerate(
                                   zip(self.replicas, kv))]

@@ -36,6 +36,13 @@ step functions via launch/serve.py.
     of dropped. Dense and paged decode are bitwise identical
     (DESIGN.md §Paged KV cache).
 
+``spec_decode`` (a ``serving/specdec.py`` SpecConfig) turns on
+draft–verify speculative decoding: every step drafts K greedy tokens
+per slot with a cheap draft model and verifies them in ONE target
+``verify_extend`` forward, emitting 1..K+1 tokens per slot — bitwise
+identical to non-speculative decoding (T=0 always; any temperature for
+seeded requests), in both kv modes (DESIGN.md §Speculative decoding).
+
 ``backend`` selects the kernel backend (kernels/backend.py) for every
 jitted step — ``"pallas"`` routes prefill/extend attention through
 flash_prefill, the continuous-batching decode through flash_decode (per
@@ -58,9 +65,10 @@ import numpy as np
 from repro.common.config import ModelConfig, WINDOW_KINDS
 from repro.kernels.ref import paged_gather_kv
 from repro.models.model import (decode_step, init_cache, init_paged_cache,
-                                prefill, prefill_extend)
+                                prefill, prefill_extend, verify_extend)
 from repro.serving.kvpool import BlockTable, KVBlockPool
 from repro.serving.sampling import SamplerConfig, sample
+from repro.serving.specdec import SpecConfig, SpecDecoder, check_spec_stack
 from repro.serving.tokenizer import SPECIALS, TOKENIZER
 
 KV_MODES = ("dense", "paged")
@@ -142,6 +150,46 @@ def _paged_gather(segments, ids):
     return jax.tree.map(g, segments)
 
 
+def advance_cache_through(params, logits, cache, tokens, *, decode_fn,
+                          extend_fn, can_extend: bool, pad_extend: bool,
+                          cache_len: int):
+    """Advance a B=1 cache through new tokens. Uses multi-token
+    ``prefill_extend`` calls when the stack supports them (chunked
+    prefill: whole attn_chunk slabs, then one bucket-padded call for
+    the remainder so jit retraces O(log n) shapes); falls back to
+    token-by-token decode otherwise. Returns (last-token logits (1,V),
+    extended cache). Shared by the engine's prefix cache and the
+    speculative-decode draft admissions (serving/specdec.py)."""
+    from repro.common.perf import get_flags
+    toks = list(tokens)
+    if not toks:
+        return logits, cache
+    if not can_extend:
+        for t in toks:
+            logits, cache = decode_fn(
+                params, cache, {"tokens": jnp.asarray([[t]], jnp.int32)})
+        return logits, cache
+    align = get_flags().attn_chunk
+    i = 0
+    while len(toks) - i >= align:
+        chunk = jnp.asarray(toks[i:i + align], jnp.int32)[None]
+        logits, cache = extend_fn(params, cache, {"tokens": chunk}, align)
+        i += align
+    rest = toks[i:]
+    if rest:
+        n = len(rest)
+        # pad rows are written at [pos+n, pos+width); cap width at
+        # the cache end — dynamic_update_slice would otherwise CLAMP
+        # the start index and silently overwrite valid prefix rows
+        room = cache_len - int(cache["pos"])
+        if pad_extend and n < room:
+            width = min(1 << (n - 1).bit_length(), room)
+            rest = rest + [0] * (width - n)
+        chunk = jnp.asarray(rest, jnp.int32)[None]
+        logits, cache = extend_fn(params, cache, {"tokens": chunk}, n)
+    return logits, cache
+
+
 def _kv_cache_bytes(segments) -> int:
     """Total bytes of the KV leaves (k/v and cross-attention ck/cv) in a
     cache pytree's segments."""
@@ -160,7 +208,8 @@ class InferenceEngine:
                  cache_len: int = 512, seed: int = 0,
                  backend: Optional[str] = None, kv_mode: str = "dense",
                  kv_blocks: Optional[int] = None,
-                 block_size: Optional[int] = None):
+                 block_size: Optional[int] = None,
+                 spec_decode: Optional[SpecConfig] = None):
         from repro.kernels.backend import get_backend
         self.cfg = cfg
         self.params = params
@@ -218,7 +267,12 @@ class InferenceEngine:
                       "tokens_generated": 0, "prefix_hits": 0,
                       "prefix_tokens_saved": 0, "admissions": 0,
                       "prefix_registrations": 0, "preemptions": 0,
-                      "resumes": 0, "prefix_evictions": 0}
+                      "resumes": 0, "prefix_evictions": 0,
+                      # speculative decoding (zero when disabled):
+                      # rounds = verify forwards, drafted/accepted =
+                      # draft-token counts (accept rate = their ratio)
+                      "spec_rounds": 0, "spec_drafted": 0,
+                      "spec_accepted": 0}
         self._kv_bytes_total = _kv_cache_bytes(self.cache["segments"])
         self._kv_peak_blocks = 0       # paged: peak pool blocks in use
         self._kv_peak_shared = 0       # paged: peak CoW-shared blocks
@@ -242,6 +296,19 @@ class InferenceEngine:
         self._pad_extend = (self._can_extend
                             and kinds <= {"full", "dense", "moe"})
         self._last_tokens = jnp.zeros((max_batch, 1), jnp.int32)
+
+        # speculative decoding: draft K cheap tokens per slot, verify
+        # them in ONE target forward (serving/specdec.py; the emitted
+        # stream is bitwise identical to non-speculative decoding)
+        self.spec: Optional[SpecDecoder] = None
+        self._verify = None
+        if spec_decode is not None:
+            check_spec_stack(cfg, "target model")
+            self.spec = SpecDecoder(spec_decode, max_batch=max_batch,
+                                    cache_len=cache_len,
+                                    backend=self.backend)
+            self._verify = jax.jit(
+                lambda p, c, b: verify_extend(p, cfg, c, b, backend=be))
 
     # ------------------------------------------------------------- API ----
     def add_request(self, prompt_text_or_ids, max_new_tokens: int = 32,
@@ -276,6 +343,11 @@ class InferenceEngine:
     def is_idle(self) -> bool:
         return not self.queue and all(s is None for s in self.slots)
 
+    @property
+    def spec_k(self) -> int:
+        """Draft tokens per speculative round (0 = spec decode off)."""
+        return self.spec.k if self.spec is not None else 0
+
     def reset(self, seed: Optional[int] = None):
         """Return the engine to its just-constructed state (drain and
         recycle a cluster replica between workloads). Cache storage is
@@ -305,6 +377,8 @@ class InferenceEngine:
         self._kv_peak_shared = 0
         self._kv_peak_slots = 0
         self._last_tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
+        if self.spec is not None:
+            self.spec.reset()
 
     # -------------------------------------------------- prefix caching ----
     def register_prefix(self, key: str, prefix_text_or_ids) -> int:
@@ -340,43 +414,12 @@ class InferenceEngine:
 
     def _decode_through(self, logits, cache, tokens: List[int]
                         ) -> Tuple[jnp.ndarray, dict]:
-        """Advance a B=1 cache through new tokens. Uses multi-token
-        ``prefill_extend`` calls when the stack supports them (chunked
-        prefill: whole attn_chunk slabs, then one bucket-padded call for
-        the remainder so jit retraces O(log n) shapes); falls back to
-        token-by-token decode otherwise. Returns (last-token logits
-        (1,V), extended cache)."""
-        from repro.common.perf import get_flags
-        toks = list(tokens)
-        if not toks:
-            return logits, cache
-        if not self._can_extend:
-            for t in toks:
-                logits, cache = self._decode(
-                    self.params, cache, {"tokens": jnp.asarray(
-                        [[t]], jnp.int32)})
-            return logits, cache
-        align = get_flags().attn_chunk
-        i = 0
-        while len(toks) - i >= align:
-            chunk = jnp.asarray(toks[i:i + align], jnp.int32)[None]
-            logits, cache = self._extend(self.params, cache,
-                                         {"tokens": chunk}, align)
-            i += align
-        rest = toks[i:]
-        if rest:
-            n = len(rest)
-            # pad rows are written at [pos+n, pos+width); cap width at
-            # the cache end — dynamic_update_slice would otherwise CLAMP
-            # the start index and silently overwrite valid prefix rows
-            room = self.cache_len - int(cache["pos"])
-            if self._pad_extend and n < room:
-                width = min(1 << (n - 1).bit_length(), room)
-                rest = rest + [0] * (width - n)
-            chunk = jnp.asarray(rest, jnp.int32)[None]
-            logits, cache = self._extend(self.params, cache,
-                                         {"tokens": chunk}, n)
-        return logits, cache
+        """Advance a B=1 cache through new tokens (see
+        ``advance_cache_through``)."""
+        return advance_cache_through(
+            self.params, logits, cache, tokens, decode_fn=self._decode,
+            extend_fn=self._extend, can_extend=self._can_extend,
+            pad_extend=self._pad_extend, cache_len=self.cache_len)
 
     def _extend_prefix(self, pref: CachedPrefix, suffix: List[int]
                        ) -> Tuple[jnp.ndarray, dict]:
@@ -523,22 +566,31 @@ class InferenceEngine:
             # refusals): leave no 0.0 sentinel for TTFT math downstream
             req.first_token_t = req.finish_t
 
-    def _ensure_room(self) -> List[Request]:
-        """Pre-decode: every active slot must own a block for the row it
-        is about to write. Under memory pressure, escalate: evict cold
-        prefix pins (inside _reserve), then preempt-and-requeue the
-        lowest-priority (latest-admitted) running request — never drop
-        it. A lone request that has outgrown the whole pool finishes
-        with ``kv_oom`` (nothing left to preempt)."""
+    def _ensure_room(self, width: int = 1) -> List[Request]:
+        """Pre-decode: every active slot must own blocks for the
+        ``width`` rows it is about to write (1 per decode step, K+1 per
+        speculative verify — rejected rows stay in blocks the slot
+        already owns, so rollback never re-enters this path). Under
+        memory pressure, escalate: evict cold prefix pins (inside
+        _reserve), then preempt-and-requeue the lowest-priority
+        (latest-admitted) running request — never drop it. A lone
+        request that has outgrown the whole pool finishes with
+        ``kv_oom`` (nothing left to preempt)."""
         finished: List[Request] = []
         for i in range(self.max_batch):
             if self.slots[i] is None:
                 continue
             table = self.tables[i]
-            if len(table.blocks) * self.block_size > table.n_tokens:
-                continue                      # room for the next row
+            needed_rows = min(table.n_tokens + width, self.cache_len)
             blocked = False
-            while not self._reserve(1):
+            while (not blocked
+                   and len(table.blocks) * self.block_size < needed_rows):
+                if self._reserve(1):
+                    j = len(table.blocks)
+                    block = self.pool.append_block(table)
+                    self.cache["block_tab"] = \
+                        self.cache["block_tab"].at[i, j].set(block)
+                    continue
                 active = [j for j in range(self.max_batch)
                           if self.slots[j] is not None]
                 victim = max(active,
@@ -555,13 +607,6 @@ class InferenceEngine:
                 self._preempt(victim)
                 if victim == i:
                     blocked = True
-                    break
-            if blocked:
-                continue
-            j = len(table.blocks)
-            block = self.pool.append_block(table)
-            self.cache["block_tab"] = \
-                self.cache["block_tab"].at[i, j].set(block)
         self._note_kv_peak()
         return finished
 
@@ -657,6 +702,16 @@ class InferenceEngine:
         while free and self.queue:
             slot = free[0]
             req = self.queue.popleft()
+            if self.spec is not None and \
+                    len(req.prompt) >= self.cache_len:
+                # plain dense truncates the prefill and emits a token
+                # or two before dying with "cache_len"; that clamped
+                # overflow write cannot be reproduced by one verify
+                # forward, so spec mode refuses up front — the paged
+                # engine's semantics
+                self._finish_now(req, "cache_len")
+                finished.append(req)
+                continue
             self.stats["admissions"] += 1
             logits, cache1, _ = self._prefill_request(req)
             if self._first_token(req, logits):
@@ -669,6 +724,8 @@ class InferenceEngine:
             self.slots[slot] = req
             self._last_tokens = self._last_tokens.at[slot, 0].set(
                 req.output[-1])
+            if self.spec is not None:
+                self.spec.admit(slot, req.prompt)
         return finished
 
     def _admit_paged(self) -> List[Request]:
@@ -714,6 +771,13 @@ class InferenceEngine:
                     req.output[-1])
                 req.swap = None
                 self.stats["resumes"] += 1
+                if self.spec is not None:
+                    # the swap restored the target's KV, but the draft
+                    # cache was dropped at preemption — rebuild it over
+                    # the same context (prompt + output minus the
+                    # carried last token)
+                    self.spec.admit(slot,
+                                    req.prompt + req.output[:-1])
                 free.popleft()
                 continue
             total = len(req.prompt)
@@ -786,21 +850,30 @@ class InferenceEngine:
                           scatter_from=j0)
             self._last_tokens = self._last_tokens.at[slot, 0].set(
                 req.output[-1])
+            if self.spec is not None:
+                self.spec.admit(slot, req.prompt)
             free.popleft()
         return finished
 
     def step(self) -> List[Request]:
         """One engine iteration: admit from queue, decode one token for
-        every active slot. Returns newly finished requests (including
-        any that terminated on their admission token). Paged mode
-        additionally grows block tables before the decode write and may
-        preempt-and-requeue under memory pressure (_ensure_room)."""
+        every active slot — or, with spec decode on, draft K cheap
+        tokens per slot and verify them in one target forward, emitting
+        1..K+1 tokens per slot (_spec_step). Returns newly finished
+        requests (including any that terminated on their admission
+        token). Paged mode additionally grows block tables before the
+        decode/verify writes and may preempt-and-requeue under memory
+        pressure (_ensure_room)."""
         finished = self._admit()
         self._note_kv_peak()
         if self.kv_mode == "paged":
-            finished.extend(self._ensure_room())
+            finished.extend(self._ensure_room(
+                1 if self.spec is None else self.spec.k + 1))
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
+            return finished
+        if self.spec is not None:
+            finished.extend(self._spec_step(active))
             return finished
         logits, self.cache = self._decode(self.params, self.cache,
                                           {"tokens": self._last_tokens})
@@ -831,6 +904,77 @@ class InferenceEngine:
                     self._release_slot(i)
         return finished
 
+    def _spec_step(self, active: List[int]) -> List[Request]:
+        """One speculative round: K greedy draft steps, one target
+        verify forward over W = K+1 positions per slot, then per-slot
+        sample-and-match acceptance (serving/specdec.py has the
+        protocol and the bitwise-parity argument).
+
+        Every emitted token is sampled from the target's verify logits
+        with the exact key schedule non-speculative decoding would use
+        (per-request fold_in streams; the engine stream still splits
+        once per sampled token), and the finish checks replicate
+        step()'s eos/max_new_tokens/cache_len decisions token by token
+        — so outputs AND finish reasons match the non-speculative
+        engine bitwise."""
+        k = self.spec.k
+        pos0 = np.asarray(self.cache["pos"])
+        drafts = self.spec.draft(self._last_tokens)           # (B, k)
+        toks = jnp.concatenate(
+            [self._last_tokens, jnp.asarray(drafts, jnp.int32)], axis=1)
+        vlogits, self.cache = self._verify(self.params, self.cache,
+                                           {"tokens": toks})
+        self.stats["decode_steps"] += 1
+        self.stats["spec_rounds"] += 1
+        new_pos = pos0.copy()
+        finished: List[Request] = []
+        full_accept = False
+        for i in active:
+            req = self.slots[i]
+            emitted = accepted = 0
+            reason = None
+            for j in range(k + 1):
+                self.rng, kj = jax.random.split(self.rng)
+                key = self._request_key(req, kj)
+                tok = int(sample(vlogits[i, j][None], key,
+                                 req.sampler)[0])
+                req.output.append(tok)
+                emitted += 1
+                self.stats["tokens_generated"] += 1
+                matched = j < k and tok == int(drafts[i, j])
+                if matched:
+                    accepted += 1
+                hit_cap = len(req.output) >= req.max_new_tokens
+                hit_len = int(pos0[i]) + j + 2 >= self.cache_len - 1
+                reason = ("eos" if tok == SPECIALS["<eos>"]
+                          else "max_new_tokens" if hit_cap
+                          else "cache_len" if hit_len else None)
+                if reason is not None or not matched:
+                    break
+            self.stats["spec_drafted"] += k
+            self.stats["spec_accepted"] += accepted
+            full_accept = full_accept or accepted == k
+            new_pos[i] = int(pos0[i]) + emitted
+            self._last_tokens = self._last_tokens.at[i, 0].set(
+                req.output[-1])
+            if self.kv_mode == "paged":
+                # rollback IS this truncation: rejected rows sit in
+                # blocks the table already holds and are overwritten
+                # before kv_len ever reaches them
+                self.tables[i].n_tokens = int(pos0[i]) + emitted
+            if reason is not None:
+                self._finish_now(req, reason)
+                finished.append(req)
+                self.slots[i] = None
+                new_pos[i] = 0
+                if self.kv_mode == "paged":
+                    self._release_slot(i)
+        self.cache["pos"] = jnp.asarray(new_pos, jnp.int32)
+        if full_accept:
+            self.spec.catch_up()
+        self.spec.set_pos(new_pos)
+        return finished
+
     def run_until_done(self, max_iters: int = 10_000) -> List[Request]:
         done: List[Request] = []
         it = 0
@@ -841,7 +985,16 @@ class InferenceEngine:
         return done
 
     def throughput_stats(self) -> Dict[str, float]:
-        return {**self.stats, **self.kv_memory_stats()}
+        st = {**self.stats, **self.kv_memory_stats()}
+        # tokens per TARGET forward — the number speculative decoding
+        # moves (> busy slots when drafts are accepted); accept rate =
+        # accepted / drafted over every speculative round
+        st["tokens_per_step"] = round(
+            st["tokens_generated"] / max(st["decode_steps"], 1), 4)
+        st["spec_accept_rate"] = round(
+            st["spec_accepted"] / max(st["spec_drafted"], 1), 4)
+        st["spec_k"] = self.spec_k
+        return st
 
     def kv_memory_stats(self) -> Dict:
         """KV-memory accounting, apples-to-apples across modes:

@@ -72,6 +72,7 @@ class PipelineStats:
     engine_backend: str = ""     # kernel backend of the mirrored engine
     engine_replicas: int = 0     # 1 = single engine, N = EngineCluster
     engine_kv_mode: str = ""     # "dense" | "paged" KV-cache manager
+    engine_spec_k: int = 0       # draft tokens/round (0 = spec off)
 
     def summary(self) -> Dict[str, float]:
         sizes = self.gate_batch_sizes or [0]
@@ -83,7 +84,8 @@ class PipelineStats:
                 "engine_turns": self.engine_turns,
                 "engine_backend": self.engine_backend,
                 "engine_replicas": self.engine_replicas,
-                "engine_kv_mode": self.engine_kv_mode}
+                "engine_kv_mode": self.engine_kv_mode,
+                "engine_spec_k": self.engine_spec_k}
 
 
 class GeckOptPipeline:
@@ -110,6 +112,7 @@ class GeckOptPipeline:
             self.stats.engine_replicas = len(
                 getattr(engine, "replicas", ())) or 1
             self.stats.engine_kv_mode = getattr(engine, "kv_mode", "")
+            self.stats.engine_spec_k = getattr(engine, "spec_k", 0)
         self._engine_sessions = []
 
     # ---------------------------------------------------------- stages ----

@@ -1,0 +1,198 @@
+"""Speculative decoding: a cheap draft model proposes K greedy tokens
+per slot, the target verifies all of them in ONE forward.
+
+GeckOpt's intent gating skews serving traffic onto a handful of hot
+intents whose completions are highly predictable — exactly the regime
+where a small ``planner_proxy_100m``-class draft agrees with the target
+often enough that one target forward emits several tokens. The protocol
+(wired into ``InferenceEngine.step`` when the engine is built with
+``spec_decode=SpecConfig(...)``):
+
+  1. **draft** — K greedy single-token steps of the draft model over
+     every active slot (continuous batching, the draft keeps its own
+     dense KV cache mirroring the target's per-slot fill levels);
+  2. **verify** — ONE target ``verify_extend`` forward scores the
+     carried last token plus all K proposals (W = K+1 rows per slot)
+     against the target's dense or paged KV cache;
+  3. **accept** — per slot, walk the W rows in order: sample the
+     target's token for each position with the request's OWN sampler
+     stream (``SamplerConfig.seed`` fold_in by output index — the same
+     key schedule non-speculative decoding uses) and accept the draft
+     proposal only if it EQUALS that sample. The first mismatch (or
+     terminal token) stops the walk; the mismatched position emits the
+     target's sample, a fully-accepted window emits the bonus K+1'th
+     sample.
+
+Because every emitted token is the target sampler's own draw under the
+non-speculative key schedule, the emitted stream is BITWISE identical
+to non-speculative decoding — at T=0 unconditionally (argmax ignores
+keys), at any temperature for seeded requests. Classic stochastic
+speculative sampling (accept with prob min(1, p/q)) only preserves the
+distribution, not the realized sequence, so it cannot meet the engine's
+determinism contract; sample-and-match trades a little acceptance for
+exactness. Rejected tokens roll back by KV-length truncation: free in
+the paged engine (the rows sit in blocks the slot already owns and are
+overwritten before ever becoming visible), masked in dense storage.
+
+The draft's KV cache is always dense (the draft is small — its slab is
+the cheap part) and is rebuilt by a chunk-aligned prefill on paged
+preempt-resume. The draft runs K+1 decode steps per round: K to propose
+and one trailing step that writes the last proposal's KV row, so a
+fully-accepted window leaves no hole in the draft cache (the engine
+skips that step when no slot accepted the whole window).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.models.model import (decode_step, init_cache, prefill,
+                                prefill_extend)
+
+_SPEC_KINDS = {"full", "dense", "moe"}
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs for ``InferenceEngine``.
+
+    draft_cfg/draft_params: the draft model (any pure-attention stack;
+    typically a much smaller config than the target — the benches use
+    the target itself as a perfect-agreement stand-in, since the repo
+    ships no trained weights to distill a real draft from).
+    k: draft tokens proposed per round (the verify forward scores k+1
+    positions, so a round emits between 1 and k+1 tokens).
+    draft_backend: kernel backend for the draft steps (default: the
+    engine's backend)."""
+    draft_cfg: ModelConfig
+    draft_params: Any
+    k: int = 4
+    draft_backend: Optional[str] = None
+
+
+def _spec_stack_error(what: str, kinds) -> str:
+    return (f"spec_decode {what} needs a pure-attention stack "
+            f"(kinds within {sorted(_SPEC_KINDS)} and no encoder): "
+            f"recurrent state cannot be rolled back by KV-length "
+            f"truncation; got kinds {sorted(kinds)}")
+
+
+def check_spec_stack(cfg: ModelConfig, what: str):
+    """Raise unless ``cfg`` supports multi-token verify + rollback."""
+    kinds = {k for unit, _ in cfg.segments for k in unit}
+    if cfg.n_enc_layers or not kinds <= _SPEC_KINDS:
+        raise ValueError(_spec_stack_error(what, kinds))
+
+
+class SpecDecoder:
+    """Draft-model side of speculative decoding: owns the draft params,
+    the draft's dense KV cache (one slot per engine slot, same
+    ``cache_len``) and the jitted draft step functions. The engine owns
+    acceptance, stats and the shared per-slot ``pos`` semantics: the
+    draft cache holds KV for exactly the tokens the target cache holds
+    (context minus the carried last token), and rolls back the same way
+    (``set_pos`` truncation)."""
+
+    def __init__(self, spec: SpecConfig, *, max_batch: int,
+                 cache_len: int, backend: str):
+        from repro.kernels.backend import get_backend
+        if spec.k < 1:
+            raise ValueError(f"spec_decode needs k >= 1, got {spec.k}")
+        check_spec_stack(spec.draft_cfg, "draft model")
+        self.cfg = spec.draft_cfg
+        self.params = spec.draft_params
+        self.k = spec.k
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.backend = get_backend(spec.draft_backend or backend).name
+        cfg, be = self.cfg, self.backend
+        self.cache = init_cache(cfg, max_batch, cache_len)
+        self.cache["pos"] = jnp.zeros((max_batch,), jnp.int32)
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, cfg, b, cache_len=cache_len,
+                                 backend=be))
+        self._decode = jax.jit(
+            lambda p, c, b: decode_step(p, cfg, c, b, backend=be))
+        self._extend = jax.jit(
+            lambda p, c, b, n: prefill_extend(p, cfg, c, b, n_valid=n,
+                                              backend=be))
+        self._catchup_tokens: Optional[jnp.ndarray] = None
+
+    def share_compiled(self, other: "SpecDecoder"):
+        """Adopt another decoder's jitted step functions (cluster
+        replicas with identical draft configs compile once, not N×)."""
+        self._prefill = other._prefill
+        self._decode = other._decode
+        self._extend = other._extend
+
+    def reset(self):
+        """Back to the just-constructed state (cache storage is reused;
+        stale rows are masked by the zeroed ``pos`` and overwritten at
+        the next admission — same contract as ``InferenceEngine.reset``)."""
+        self.cache["pos"] = jnp.zeros((self.max_batch,), jnp.int32)
+        self._catchup_tokens = None
+
+    # ------------------------------------------------------ admission ----
+    def admit(self, slot: int, ctx_ids):
+        """Prefill the draft over a request's context (its prompt — or
+        prompt + output[:-1] when a preempted request resumes, the
+        target's swap restores its KV but the draft's was dropped) and
+        install it in ``slot``. Long contexts prefill on their
+        chunk-aligned head and extend over the tail, like the engine's
+        ``register_prefix``."""
+        from repro.common.perf import get_flags
+        from repro.serving.engine import (_insert_slot,
+                                          advance_cache_through)
+        ids = list(ctx_ids)
+        assert 0 < len(ids) < self.cache_len, (len(ids), self.cache_len)
+        align = get_flags().attn_chunk
+        head = (ids if len(ids) <= align
+                else ids[:(len(ids) // align) * align])
+        prompt = jnp.asarray(head, jnp.int32)[None, :]
+        logits, cache = self._prefill(self.params, {"tokens": prompt})
+        cache = dict(cache)
+        cache["pos"] = jnp.asarray(len(head), jnp.int32)
+        _, cache = advance_cache_through(
+            self.params, logits, cache, ids[len(head):],
+            decode_fn=self._decode, extend_fn=self._extend,
+            can_extend=True, pad_extend=True, cache_len=self.cache_len)
+        self.cache = _insert_slot(self.cache, cache, slot)
+        self.cache["pos"] = self.cache["pos"].at[slot].set(len(ids))
+
+    # ------------------------------------------------------- drafting ----
+    def draft(self, last_tokens) -> np.ndarray:
+        """K greedy draft steps over every slot (continuous batching;
+        idle slots ride along harmlessly, like the target's decode).
+        Returns the (B, k) int proposals and stages the trailing
+        catch-up token (see ``catch_up``). Leaves the draft cache's
+        ``pos`` advanced by k — the engine overwrites it with the
+        accepted lengths (``set_pos``)."""
+        toks = last_tokens
+        outs = []
+        for _ in range(self.k):
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              {"tokens": toks})
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            outs.append(np.asarray(toks))
+        self._catchup_tokens = toks
+        return np.concatenate(outs, axis=1)
+
+    def catch_up(self):
+        """Write the last proposal's KV row (one extra draft step,
+        logits discarded). Needed only when some slot accepted its
+        whole window — its next-round context includes the K'th draft
+        token, whose KV the K proposal steps never wrote. Harmless for
+        other slots: the row lands past their truncated ``pos`` and is
+        overwritten before becoming visible."""
+        _, self.cache = self._decode(self.params, self.cache,
+                                     {"tokens": self._catchup_tokens})
+
+    def set_pos(self, new_pos):
+        """Adopt the target's post-acceptance fill levels — the
+        KV-length truncation that rolls back rejected draft rows."""
+        self.cache["pos"] = jnp.asarray(new_pos, jnp.int32)

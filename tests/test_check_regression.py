@@ -1,0 +1,77 @@
+"""The CI bench-regression gate (benchmarks/check_regression.py): every
+committed tiny baseline must pass against itself, directions/tolerances
+must catch real regressions and forgive improvements, and the CLI must
+exit nonzero on failure.
+"""
+import copy
+import json
+import os
+
+import pytest
+
+from benchmarks.check_regression import SPECS, compare, main
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(bench):
+    path = os.path.join(RESULTS, f"{bench}_bench_tiny.json")
+    if not os.path.exists(path):
+        pytest.skip(f"no committed baseline {path}")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("bench", sorted(SPECS))
+def test_baseline_passes_against_itself(bench):
+    data = load(bench)
+    failures, _ = compare(bench, data, data)
+    assert failures == []
+
+
+def test_regression_beyond_tolerance_fails():
+    base = load("specdec")
+    cur = copy.deepcopy(base)
+    cur["meta"]["spec_speedup_skewed_greedy"] = \
+        base["meta"]["spec_speedup_skewed_greedy"] * 0.5
+    failures, _ = compare("specdec", cur, base)
+    assert failures == ["spec_speedup_skewed_greedy"]
+
+
+def test_drift_within_tolerance_passes():
+    base = load("specdec")
+    cur = copy.deepcopy(base)
+    cur["meta"]["spec_speedup_skewed_greedy"] = \
+        base["meta"]["spec_speedup_skewed_greedy"] * 0.95   # tol 0.1
+    failures, _ = compare("specdec", cur, base)
+    assert failures == []
+
+
+def test_improvement_never_fails():
+    base = load("paging")
+    cur = copy.deepcopy(base)
+    cur["meta"]["paged_memory_savings"] = 0.99
+    failures, _ = compare("paging", cur, base)
+    assert failures == []
+
+
+def test_equal_metric_catches_parity_break():
+    base = load("paging")
+    cur = copy.deepcopy(base)
+    cur["meta"]["tokens_identical"] = False
+    failures, _ = compare("paging", cur, base)
+    assert "tokens_identical" in failures
+
+
+def test_cli_exit_codes(tmp_path):
+    base_path = os.path.join(RESULTS, "cluster_bench_tiny.json")
+    if not os.path.exists(base_path):
+        pytest.skip("no committed baseline")
+    assert main(["--bench", "cluster", "--current", base_path]) == 0
+    bad = json.load(open(base_path))
+    for r in bad["rows"]:
+        if r["policy"] == "intent_affinity":
+            r["prefix_hit"] = 0.0
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(bad))
+    assert main(["--bench", "cluster", "--current", str(p)]) == 1

@@ -1,0 +1,78 @@
+"""Argparse smoke over launch/serve.py: flag combinations parse to the
+expected namespaces, invalid combinations error out BEFORE any model is
+built (SystemExit from argparse), and one tiny single-engine run plus
+one tiny spec-decode cluster run exercise the two serving paths end to
+end.
+"""
+import pytest
+
+from repro.launch.serve import build_parser, main, validate_args
+
+
+def parse(argv):
+    ap = build_parser()
+    return validate_args(ap, ap.parse_args(argv))
+
+
+# ------------------------------------------------------------ parsing ----
+
+def test_defaults():
+    args = parse([])
+    assert args.arch == "planner-proxy-100m"
+    assert args.replicas == 1 and args.router == "intent_affinity"
+    assert args.kv_mode == "dense"
+    assert args.kv_blocks is None and args.block_size is None
+    assert not args.spec_decode and args.draft_k == 4
+
+
+@pytest.mark.parametrize("argv", [
+    ["--replicas", "4", "--router", "least_loaded", "--profile",
+     "bursty", "--skew", "0.7", "--turns", "2"],
+    ["--kv-mode", "paged", "--kv-blocks", "64", "--block-size", "16"],
+    ["--kv-mode", "paged"],                  # paged defaults are fine
+    ["--backend", "pallas", "--spec-decode", "--draft-k", "2"],
+    ["--spec-decode"],                       # default k
+    ["--replicas", "2", "--spec-decode", "--kv-mode", "paged"],
+    ["--skew", "1.0"],                       # boundary is valid
+])
+def test_valid_combinations_parse(argv):
+    parse(argv)
+
+
+@pytest.mark.parametrize("argv", [
+    ["--kv-blocks", "64"],                   # paged-only kwarg on dense
+    ["--block-size", "16"],
+    ["--kv-mode", "dense", "--kv-blocks", "8"],
+    ["--spec-decode", "--draft-k", "0"],     # spec decode with k < 1
+    ["--spec-decode", "--draft-k", "-3"],
+    ["--skew", "1.5"],                       # out of range
+    ["--skew", "-0.1"],
+    ["--replicas", "0"],
+    ["--router", "bogus"],                   # argparse choices
+    ["--kv-mode", "slab"],
+    ["--backend", "cuda"],
+    ["--profile", "steady"],
+])
+def test_invalid_combinations_error(argv):
+    with pytest.raises(SystemExit):
+        parse(argv)
+
+
+# ------------------------------------------------------- tiny real runs ----
+
+def test_single_engine_run(capsys):
+    main(["--smoke", "--requests", "2", "--max-new", "2",
+          "--max-batch", "2", "--cache-len", "128"])
+    out = capsys.readouterr().out
+    assert "served 2 requests" in out
+    assert "kv[dense]" in out
+
+
+def test_cluster_spec_decode_run(capsys):
+    main(["--smoke", "--replicas", "2", "--requests", "4",
+          "--max-new", "4", "--max-batch", "2", "--cache-len", "128",
+          "--temperature", "0.0", "--spec-decode", "--draft-k", "2",
+          "--router", "intent_affinity", "--skew", "0.7"])
+    out = capsys.readouterr().out
+    assert "spec-decode[k=2]" in out
+    assert "accept rate" in out

@@ -1,0 +1,384 @@
+"""Speculative decoding (draft–verify): the engine's hard invariant is
+BITWISE-identical output tokens AND finish reasons between speculative
+and non-speculative decoding — at T=0 unconditionally, at T=0.8 for
+seeded requests — in dense and paged KV modes, on reference and pallas
+backends, and through paged preemption-and-resume. Plus the model-level
+contract (verify_extend row r == the r'th sequential decode_step,
+bitwise) and the flash_verify kernels against their oracles.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.kernels.flash_verify import flash_verify, flash_verify_paged
+from repro.kernels.ref import (paged_verify_attention_ref,
+                               verify_attention_ref)
+from repro.models.model import (decode_step, init_cache, init_paged_cache,
+                                init_params, prefill, verify_extend)
+from repro.serving.cluster import EngineCluster
+from repro.serving.engine import InferenceEngine, _insert_slot, _paged_scatter
+from repro.serving.sampling import SamplerConfig
+from repro.serving.specdec import SpecConfig, SpecDecoder
+
+BS = 16                        # paged block size under test
+CACHE = 128
+
+
+@pytest.fixture(scope="module")
+def planner():
+    cfg = get_smoke_config("planner-proxy-100m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def other_draft(planner):
+    """An independently-initialized draft: near-zero agreement with the
+    target — parity must hold regardless of acceptance."""
+    cfg, _ = planner
+    return init_params(jax.random.PRNGKey(7), cfg)
+
+
+@pytest.fixture(scope="module")
+def donors(planner):
+    """Compile each engine flavor once: [0] plain, [1] spec-enabled."""
+    cfg, params = planner
+    spec = SpecConfig(draft_cfg=cfg, draft_params=params, k=3)
+    return (InferenceEngine(cfg, params, max_batch=2, cache_len=CACHE),
+            InferenceEngine(cfg, params, max_batch=2, cache_len=CACHE,
+                            spec_decode=spec))
+
+
+def make_engine(planner, donors, spec=None, **kw):
+    cfg, params = planner
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("cache_len", CACHE)
+    eng = InferenceEngine(cfg, params, spec_decode=spec, **kw)
+    donor = donors[1] if spec is not None else donors[0]
+    if kw["cache_len"] == donor.cache_len and eng.backend == donor.backend:
+        eng._prefill, eng._decode, eng._extend = \
+            donor._prefill, donor._decode, donor._extend
+        if spec is not None:
+            eng._verify = donor._verify
+            eng.spec.share_compiled(donor.spec)
+    return eng
+
+
+PREFIX = list(range(5, 25))
+
+
+def _prompts(n, suffix_len=6):
+    return [PREFIX + list(range(200 + suffix_len * i,
+                                200 + suffix_len * (i + 1)))
+            for i in range(n)]
+
+
+def _serve(eng, prompts, max_new=11, temperature=0.0, seeds=True):
+    eng.register_prefix("hot", PREFIX)
+    rid_to_idx = {}
+    for i, p in enumerate(prompts):
+        rid = eng.add_request(
+            p, max_new_tokens=max_new,
+            sampler=SamplerConfig(temperature=temperature,
+                                  top_k=40 if temperature else 0,
+                                  seed=500 + i if seeds else None),
+            prefix_key="hot")
+        rid_to_idx[rid] = i
+    done = eng.run_until_done()
+    return {rid_to_idx[r.request_id]: (tuple(r.output), r.finish_reason)
+            for r in done}
+
+
+# ------------------------------------------------------- model level ----
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_verify_extend_matches_sequential_decode(planner, backend):
+    """verify_extend's W logit rows are bitwise the W sequential
+    decode_step logits — dense and paged — on both backends."""
+    cfg, params = planner
+    B, W = 2, 4
+    toks = np.array([[3, 7, 11, 13], [4, 8, 12, 14]], np.int32)
+    prompts = [list(range(5, 17)), list(range(30, 39))]
+
+    def build_dense():
+        cache = init_cache(cfg, B, CACHE)
+        cache["pos"] = jnp.zeros((B,), jnp.int32)
+        for b, p in enumerate(prompts):
+            _, c1 = prefill(params, cfg,
+                            {"tokens": jnp.asarray(p, jnp.int32)[None]},
+                            cache_len=CACHE, backend=backend)
+            cache = _insert_slot(cache, dict(c1), b)
+            cache["pos"] = cache["pos"].at[b].set(len(p))
+        return cache
+
+    def build_paged():
+        nb = B * CACHE // BS
+        cache = init_paged_cache(cfg, B, CACHE, nb, BS)
+        for b, p in enumerate(prompts):
+            _, c1 = prefill(params, cfg,
+                            {"tokens": jnp.asarray(p, jnp.int32)[None]},
+                            cache_len=CACHE, backend=backend)
+            need = -(-(len(p) + W + 1) // BS)
+            ids = np.full((CACHE // BS,), nb, np.int32)
+            ids[:need] = range(b * 8, b * 8 + need)
+            cache["segments"] = _paged_scatter(
+                cache["segments"], c1["segments"], jnp.asarray(ids))
+            cache["block_tab"] = cache["block_tab"].at[b].set(
+                jnp.asarray(ids))
+            cache["pos"] = cache["pos"].at[b].set(len(p))
+        return cache
+
+    for build in (build_dense, build_paged):
+        cache = build()
+        seq, dcache = [], dict(cache)
+        for j in range(W):
+            lg, dcache = decode_step(
+                params, cfg, dcache,
+                {"tokens": jnp.asarray(toks[:, j:j + 1])},
+                backend=backend)
+            seq.append(np.asarray(lg))
+        seq = np.stack(seq, axis=1)
+        vlg, vcache = verify_extend(params, cfg, cache,
+                                    {"tokens": jnp.asarray(toks)},
+                                    backend=backend)
+        assert np.array_equal(seq, np.asarray(vlg)), build.__name__
+        # the written KV rows must match the sequential writes too
+        k_seq = np.asarray(dcache["segments"][0][0]["k"])
+        k_ver = np.asarray(vcache["segments"][0][0]["k"])
+        assert np.array_equal(k_seq, k_ver), build.__name__
+
+
+def test_verify_pos_rides_unchanged(planner):
+    """verify_extend returns pos untouched — the engine owns the
+    accepted-length advance (rollback-by-truncation)."""
+    cfg, params = planner
+    cache = init_cache(cfg, 2, CACHE)
+    cache["pos"] = jnp.asarray([5, 9], jnp.int32)
+    _, out = verify_extend(params, cfg, cache,
+                           {"tokens": jnp.zeros((2, 3), jnp.int32)})
+    assert np.array_equal(np.asarray(out["pos"]), [5, 9])
+
+
+# ----------------------------------------------------------- kernels ----
+
+def test_flash_verify_matches_oracle():
+    rng = np.random.default_rng(0)
+    B, Hq, Hkv, W, Sk, hd = 3, 4, 2, 5, 64, 16
+    q = jnp.asarray(rng.normal(size=(B, Hq, W, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, Sk, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, Sk, hd)), jnp.float32)
+    kv_len = jnp.asarray([7, 40, 64], jnp.int32)
+    out = flash_verify(q, k, v, kv_len, interpret=True)
+    ref = verify_attention_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_verify_paged_matches_oracle():
+    rng = np.random.default_rng(1)
+    B, Hq, Hkv, W, hd, nb, bs, mb = 2, 4, 2, 4, 16, 12, 8, 6
+    q = jnp.asarray(rng.normal(size=(B, Hq, W, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nb, Hkv, bs, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, Hkv, bs, hd)), jnp.float32)
+    tab = jnp.asarray([[3, 0, 7, nb, nb, nb],
+                       [5, 9, 1, 2, 6, nb]], jnp.int32)
+    kv_len = jnp.asarray([19, 37], jnp.int32)
+    out = flash_verify_paged(q, kp, vp, tab, kv_len, interpret=True)
+    ref = paged_verify_attention_ref(q, kp, vp, tab, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------ engine parity ----
+
+@pytest.mark.parametrize("kv_kw", [
+    {},
+    {"kv_mode": "paged", "kv_blocks": 16, "block_size": BS},
+], ids=["dense", "paged"])
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_engine_parity(planner, donors, kv_kw, temperature):
+    """Spec and non-spec engines emit bitwise-identical tokens and
+    finish reasons, dense and paged, greedy and seeded T=0.8."""
+    cfg, params = planner
+    prompts = _prompts(5)
+    base = _serve(make_engine(planner, donors, **kv_kw), prompts,
+                  temperature=temperature)
+    spec = SpecConfig(draft_cfg=cfg, draft_params=params, k=3)
+    so = _serve(make_engine(planner, donors, spec=spec, **kv_kw),
+                prompts, temperature=temperature)
+    assert base == so
+
+
+def test_engine_parity_pallas(planner, donors):
+    """Parity through the flash_verify kernels (interpret mode): the
+    fused verify read must reproduce flash_decode's bits row by row."""
+    cfg, params = planner
+    spec = SpecConfig(draft_cfg=cfg, draft_params=params, k=2)
+    prompts = _prompts(2)
+    for kv_kw in ({}, {"kv_mode": "paged", "kv_blocks": 16,
+                       "block_size": BS}):
+        base = _serve(make_engine(planner, donors, backend="pallas",
+                                  **kv_kw), prompts, max_new=6)
+        so = _serve(make_engine(planner, donors, spec=spec,
+                                backend="pallas", **kv_kw), prompts,
+                    max_new=6)
+        assert base == so, kv_kw
+
+
+def test_parity_survives_zero_agreement(planner, donors, other_draft):
+    """A draft that never matches the target still yields exact outputs
+    — acceptance only modulates speed. (Random independent weights:
+    accept rate ~1/vocab.)"""
+    cfg, params = planner
+    prompts = _prompts(4)
+    base = _serve(make_engine(planner, donors), prompts)
+    spec = SpecConfig(draft_cfg=cfg, draft_params=other_draft, k=3)
+    eng = make_engine(planner, donors, spec=spec)
+    so = _serve(eng, prompts)
+    assert base == so
+    st = eng.throughput_stats()
+    assert st["spec_accept_rate"] < 0.5
+    # every round still emits >= 1 token per busy slot
+    assert st["tokens_per_step"] >= 1.0
+
+
+def test_parity_through_preempt_resume(planner, donors):
+    """Paged spec decoding under memory pressure: preemptions fire, the
+    draft cache is rebuilt on resume, outputs stay identical to the
+    dense spec run. (Same pressure shape as the non-spec
+    test_paged_engine preempt test: 3 long prompts vs a 7-block pool.)"""
+    cfg, params = planner
+    spec = SpecConfig(draft_cfg=cfg, draft_params=params, k=3)
+
+    def run(**kw):
+        eng = make_engine(planner, donors, spec=spec, **kw)
+        rid_to_idx = {}
+        for i in range(3):
+            rid = eng.add_request(
+                list(range(5, 45)), max_new_tokens=24,
+                sampler=SamplerConfig(temperature=0.8, top_k=40,
+                                      seed=77 + i))
+            rid_to_idx[rid] = i
+        done = eng.run_until_done()
+        return {rid_to_idx[r.request_id]: (tuple(r.output),
+                                           r.finish_reason)
+                for r in done}, eng
+
+    dense, _ = run()
+    paged, eng = run(kv_mode="paged", kv_blocks=7, block_size=BS)
+    assert eng.stats["preemptions"] > 0
+    assert eng.stats["resumes"] == eng.stats["preemptions"]
+    assert dense == paged
+
+
+# -------------------------------------------------- speedup and stats ----
+
+def test_self_draft_speedup_and_stats(planner, donors):
+    """Perfect-agreement draft at T=0: accept rate 1.0 when windows
+    never truncate, tokens/step > 1.5x the non-speculative run (the
+    bench's acceptance bar, asserted here too)."""
+    cfg, params = planner
+    prompts = _prompts(4)
+    base_eng = make_engine(planner, donors)
+    base = _serve(base_eng, prompts, max_new=12)       # 12 = 3 windows
+    spec = SpecConfig(draft_cfg=cfg, draft_params=params, k=3)
+    eng = make_engine(planner, donors, spec=spec)
+    so = _serve(eng, prompts, max_new=12)
+    assert base == so
+    st = eng.throughput_stats()
+    bst = base_eng.throughput_stats()
+    assert st["spec_accept_rate"] == 1.0
+    assert st["spec_rounds"] == st["decode_steps"]
+    assert st["spec_drafted"] > 0 and st["spec_drafted"] % 3 == 0
+    assert st["tokens_per_step"] > 1.5 * bst["tokens_per_step"]
+    assert st["spec_k"] == 3 and bst["spec_k"] == 0
+
+
+def test_oversized_prompt_refused_upfront(planner, donors):
+    """With spec on, a dense-mode prompt that can never fit finishes
+    "cache_len" at admission (paged semantics) instead of crashing the
+    draft admit or emitting clamped-overflow tokens."""
+    cfg, params = planner
+    spec = SpecConfig(draft_cfg=cfg, draft_params=params, k=2)
+    eng = make_engine(planner, donors, spec=spec)
+    rid = eng.add_request(list(range(5, 5 + CACHE + 10)),
+                          max_new_tokens=4)
+    done = eng.run_until_done()
+    assert len(done) == 1 and done[0].request_id == rid
+    assert done[0].finish_reason == "cache_len"
+    assert done[0].output == []
+    assert eng.is_idle()
+
+
+def test_engine_reset_with_spec(planner, donors):
+    cfg, params = planner
+    spec = SpecConfig(draft_cfg=cfg, draft_params=params, k=3)
+    eng = make_engine(planner, donors, spec=spec)
+    first = _serve(eng, _prompts(3))
+    eng.reset()
+    assert eng.stats["spec_rounds"] == 0
+    again = _serve(eng, _prompts(3))
+    assert first == again
+
+
+# ---------------------------------------------------------- cluster ----
+
+def test_cluster_spec_aggregates(planner, donors):
+    cfg, params = planner
+    spec = SpecConfig(draft_cfg=cfg, draft_params=params, k=3)
+    cluster = EngineCluster(cfg, params, 2, max_batch=2,
+                            cache_len=CACHE, router="round_robin",
+                            spec_decode=spec)
+    for e in cluster.replicas:      # reuse the donor's compiled steps
+        e._prefill, e._decode, e._extend = \
+            donors[1]._prefill, donors[1]._decode, donors[1]._extend
+        e._verify = donors[1]._verify
+        e.spec.share_compiled(donors[1].spec)
+    assert cluster.spec_k == 3
+    for i, p in enumerate(_prompts(6)):
+        cluster.submit(p, max_new_tokens=8,
+                       sampler=SamplerConfig(seed=i))
+    cluster.run_until_done()
+    agg = cluster.throughput_stats()
+    assert agg["spec_rounds"] > 0
+    assert agg["spec_accept_rate"] == 1.0
+    assert agg["tokens_per_step"] > 1.5
+    assert agg["spec_k"] == 3
+
+
+def test_cluster_engines_kwarg_refuses_spec(planner):
+    cfg, params = planner
+    eng = InferenceEngine(cfg, params, max_batch=2, cache_len=CACHE)
+    spec = SpecConfig(draft_cfg=cfg, draft_params=params, k=2)
+    with pytest.raises(ValueError, match="spec_decode"):
+        EngineCluster(engines=[eng], spec_decode=spec)
+
+
+# -------------------------------------------------------- validation ----
+
+def test_spec_config_validation(planner):
+    cfg, params = planner
+    with pytest.raises(ValueError, match="k >= 1"):
+        InferenceEngine(cfg, params, max_batch=2, cache_len=CACHE,
+                        spec_decode=SpecConfig(draft_cfg=cfg,
+                                               draft_params=params,
+                                               k=0))
+
+
+def test_spec_rejects_recurrent_stacks(planner):
+    cfg, params = planner
+    xcfg = get_smoke_config("xlstm-125m")
+    xparams = init_params(jax.random.PRNGKey(0), xcfg)
+    # recurrent TARGET: state cannot be rolled back by truncation
+    with pytest.raises(ValueError, match="pure-attention"):
+        InferenceEngine(xcfg, xparams, max_batch=2, cache_len=CACHE,
+                        spec_decode=SpecConfig(draft_cfg=xcfg,
+                                               draft_params=xparams,
+                                               k=2))
+    # recurrent DRAFT: same constraint
+    with pytest.raises(ValueError, match="pure-attention"):
+        SpecDecoder(SpecConfig(draft_cfg=xcfg, draft_params=xparams,
+                               k=2),
+                    max_batch=2, cache_len=CACHE, backend="reference")
