@@ -91,6 +91,20 @@ def _specdec_metrics(d):
     }
 
 
+def _toolgraph_metrics(d):
+    return {
+        "round_trip_reduction_gated":
+            d["meta"]["round_trip_reduction_gated"],
+        "token_reduction_gated": d["meta"]["token_reduction_gated"],
+        "tools_per_round_trip_gated":
+            d["meta"]["tools_per_round_trip_gated"],
+        "fused_tokens_per_task": d["meta"]["fused_tokens_per_task"],
+        "quality_identical": d["meta"]["quality_identical"],
+        "fused_parity": d["meta"]["fused_parity"],
+        "world_unchanged": d["meta"]["world_unchanged"],
+    }
+
+
 # (direction, relative tolerance) per metric; see the module docstring
 SPECS = {
     "engine": (_engine_metrics, {
@@ -120,6 +134,18 @@ SPECS = {
         "spec_speedup_skewed_greedy": ("higher", 0.1),
         "spec_accept_skewed_greedy": ("higher", 0.05),
         "tokens_identical": ("equal", 0.0),
+    }),
+    "toolgraph": (_toolgraph_metrics, {
+        # round-trips saved is the compiler's headline — direction
+        # higher: losing fusion width is the regression being gated
+        "round_trip_reduction_gated": ("higher", 0.1),
+        "token_reduction_gated": ("higher", 0.1),
+        "tools_per_round_trip_gated": ("higher", 0.1),
+        "fused_tokens_per_task": ("lower", 0.1),
+        # invariants, not volumes: parity flags must hold exactly
+        "quality_identical": ("equal", 0.0),
+        "fused_parity": ("equal", 0.0),
+        "world_unchanged": ("equal", 0.0),
     }),
 }
 

@@ -49,13 +49,23 @@ def run(n_tasks: int = 200, seed: int = 0):
                          seed=seed), "full-catalog")
     gk = profile(Agent(DEFAULT_REGISTRY, world, cfg, gate=gate, seed=seed),
                  "geckopt-gated")
-    out = {"full": base, "gated": gk,
+    # third profile: gated + tool-graph compiler — steps become DAG
+    # round-trips, so tools/step is the fusion width per LLM request
+    ccfg = PlannerConfig(mode="react", few_shot=False, compile_plans=True)
+    cgate = IntentGate(imap, ScriptedIntentClassifier(
+        0.97, np.random.default_rng(seed)), DEFAULT_REGISTRY.libraries())
+    comp = profile(Agent(DEFAULT_REGISTRY, world, ccfg, gate=cgate,
+                         seed=seed), "geckopt-gated+compiled")
+    out = {"full": base, "gated": gk, "gated_compiled": comp,
            "step_reduction_pct": round(
                100 * (1 - gk["steps_per_task"] / base["steps_per_task"]),
                2),
            "tools_per_step_gain_pct": round(
                100 * (gk["tools_per_step"] / base["tools_per_step"] - 1),
-               2)}
+               2),
+           "compiled_round_trip_reduction": round(
+               gk["steps_per_task"] / max(comp["steps_per_task"], 1e-9),
+               4)}
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, "steps_tools.json"), "w") as f:
         json.dump(out, f, indent=1)
@@ -69,7 +79,10 @@ def main():
           f"(-{out['step_reduction_pct']}%), tools/step "
           f"{out['full']['tools_per_step']:.2f} -> "
           f"{out['gated']['tools_per_step']:.2f} "
-          f"(+{out['tools_per_step_gain_pct']}%)")
+          f"(+{out['tools_per_step_gain_pct']}%); compiled round-trips "
+          f"{out['gated_compiled']['steps_per_task']:.2f} "
+          f"({out['compiled_round_trip_reduction']}x fewer), tools/rt "
+          f"{out['gated_compiled']['tools_per_step']:.2f}")
     return out
 
 

@@ -62,12 +62,17 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
 def run(n_tasks: int = 400, seed: int = 0, gate_accuracy: float = 0.97,
-        classifier=None, tag: str = "table2", concurrency: int = 16):
+        classifier=None, tag: str = "table2", concurrency: int = 16,
+        compile_plans: bool = False):
     """Evaluate all 8 (mode × shot × ±gate) cells.
 
     ``concurrency`` > 1 drives each cell through the concurrent pipeline
     (N sessions in flight, wave-batched gating); 1 falls back to the
     sequential loop. Both produce identical metrics at the same seed.
+
+    ``compile_plans`` turns on the tool-graph compiler: quality columns
+    are invariant (tests/test_geckopt.py asserts it), only steps and
+    Tokens/Task move — benchmarks/toolgraph_bench.py measures the delta.
     """
     world = build_world(seed)
     tasks = make_benchmark(world, n_tasks, seed=seed)
@@ -85,7 +90,8 @@ def run(n_tasks: int = 400, seed: int = 0, gate_accuracy: float = 0.97,
     rows = []
     for mode in ("cot", "react"):
         for fs in (False, True):
-            cfg = PlannerConfig(mode=mode, few_shot=fs)
+            cfg = PlannerConfig(mode=mode, few_shot=fs,
+                                compile_plans=compile_plans)
             base = _eval(Agent(DEFAULT_REGISTRY, world, cfg, gate=None,
                                seed=seed), cfg.name)
             gk = _eval(Agent(DEFAULT_REGISTRY, world, cfg, gate=gate,

@@ -35,10 +35,12 @@ import numpy as np
 
 from repro.core.accounting import TokenLedger
 from repro.core.gate import IntentGate
-from repro.core.planner import PlannerConfig, PlanStep, ScriptedPlanner
+from repro.core.planner import (CompiledStep, PlannerConfig, PlanStep,
+                                ScriptedPlanner)
 from repro.core.tools import Tool, ToolRegistry
 from repro.env.tasks import Task
-from repro.env.tools_impl import ToolError, Workspace, execute_tool
+from repro.env.tools_impl import (NodeObservation, ToolError, Workspace,
+                                  execute_graph, execute_tool)
 from repro.env.world import World
 
 
@@ -70,7 +72,12 @@ class AgentSession:
     fallback_used: bool = False
     completed: bool = False
     done: bool = False
-    steps: int = 0
+    steps: int = 0              # planner LLM round-trips issued
+    virtual_steps: int = 0      # linear planner steps covered (== steps
+    #                             without the compiler); the max_steps
+    #                             budget is charged in virtual steps so
+    #                             compilation cannot change which calls
+    #                             the behaviour model gets to make
     index: int = 0              # arrival order (pipeline bookkeeping)
 
     def result(self) -> TaskResult:
@@ -122,18 +129,66 @@ class Agent:
             intent, libs = self.gate(session.task.query, session.ledger)
             self.apply_gate_result(session, intent, libs)
 
-    def step_session(self, session: AgentSession) -> bool:
-        """One planner step (one LLM request). Returns True when the
-        session has finished (plan complete or step budget exhausted)."""
-        if session.done:
-            return True
-        session.steps += 1
+    def plan_step(self, session: AgentSession):
+        """One planner LLM round-trip: serialize the prompt, draw the
+        next (linear or compiled) step, charge the ledger. Execution and
+        reconciliation are separate (``execute_step``/``apply_step``) so
+        the pipeline can fuse many sessions' round-trips into one
+        batched tool execution."""
         s = session
+        s.steps += 1
         prompt = s.planner.serialize_prompt(s.task, s.catalog, s.history)
-        step = s.planner.next_step(s.task, s.visible, s.history)
+        if self.planner_cfg.compile_plans:
+            budget = self.planner_cfg.max_steps - s.virtual_steps
+            step = s.planner.next_compiled_step(s.task, s.visible,
+                                                s.history, budget)
+            s.virtual_steps += step.n_virtual
+            n_calls = len(step.graph.nodes)
+        else:
+            step = s.planner.next_step(s.task, s.visible, s.history)
+            s.virtual_steps += 1
+            n_calls = len(step.calls)
         s.ledger.record("plan", prompt,
-                        s.planner.serialize_completion(step))
+                        s.planner.serialize_completion(step),
+                        tool_calls=n_calls,
+                        virtual_steps=(step.n_virtual
+                                       if isinstance(step, CompiledStep)
+                                       else 1))
+        return step
 
+    def execute_step(self, session: AgentSession, step
+                     ) -> Optional[List[NodeObservation]]:
+        """Run the step's tool calls against the session workspace.
+        Linear steps execute in emission order; compiled steps execute
+        their hazard DAG in topological waves (observation-equivalent,
+        see env/tools_impl.execute_graph). Returns None when the step
+        carries no calls (final / TOOL_NOT_FOUND / empty)."""
+        s = session
+        if isinstance(step, CompiledStep):
+            if not step.graph.nodes:
+                return None
+            return execute_graph(s.workspace, step.graph)
+        if not step.calls or step.tool_not_found:
+            return None
+        obs: List[NodeObservation] = []
+        for i, call in enumerate(step.calls):
+            try:
+                out = execute_tool(s.workspace, call.tool, call.args)
+                obs.append(NodeObservation(i, call.tool,
+                                           f"{call.tool} -> {out}", True))
+            except ToolError as e:
+                obs.append(NodeObservation(i, call.tool,
+                                           f"{call.tool} -> ERROR: {e}",
+                                           False))
+        return obs
+
+    def apply_step(self, session: AgentSession, step,
+                   observations: Optional[List[NodeObservation]]) -> bool:
+        """Reconcile a round-trip's outcome into the session: fallback
+        handling, observation/history append (observations arrive in
+        node-id order — the documented reconciliation order), completion
+        and the (virtual) step budget. Returns True when done."""
+        s = session
         if step.tool_not_found and s.gated and not s.fallback_used:
             # GeckOpt fallback: revert to the full toolset
             s.fallback_used = True
@@ -142,32 +197,36 @@ class Agent:
             s.planner.note_fallback()
             s.history.append("Observation: TOOL_NOT_FOUND — reverting to "
                              "the full tool catalog.")
-        elif step.final is not None:
-            s.completed = True
-            s.done = True
-        elif not step.calls:
-            s.history.append("Observation: (no action)")
         else:
-            ws = s.workspace
-            obs_parts = []
-            for call in step.calls:
-                try:
-                    out = execute_tool(ws, call.tool, call.args)
-                    s.executed.append(call.tool)
-                    obs_parts.append(f"{call.tool} -> {out}")
-                except ToolError as e:
-                    obs_parts.append(f"{call.tool} -> ERROR: {e}")
-            s.history.append("Observation: " + " | ".join(obs_parts))
-            s.history.append(
-                f"Workspace: {len(ws.handles)} handles loaded, "
-                f"{len(ws.map_layers)} map layers, "
-                f"{len(ws.detections)} detection sets, "
-                f"{len(ws.artifacts)} artifacts; last tools: "
-                f"{', '.join(s.executed[-4:]) or 'none'}")
+            if observations:
+                ws = s.workspace
+                s.executed.extend(o.tool for o in observations if o.ok)
+                s.history.append("Observation: " + " | ".join(
+                    o.text for o in observations))
+                s.history.append(
+                    f"Workspace: {len(ws.handles)} handles loaded, "
+                    f"{len(ws.map_layers)} map layers, "
+                    f"{len(ws.detections)} detection sets, "
+                    f"{len(ws.artifacts)} artifacts; last tools: "
+                    f"{', '.join(s.executed[-4:]) or 'none'}")
+            elif step.final is None:
+                s.history.append("Observation: (no action)")
+            if step.final is not None:
+                s.completed = True
+                s.done = True
 
-        if s.steps >= self.planner_cfg.max_steps:
+        if s.virtual_steps >= self.planner_cfg.max_steps:
             s.done = True
         return s.done
+
+    def step_session(self, session: AgentSession) -> bool:
+        """One planner round-trip (one LLM request). Returns True when
+        the session has finished (plan complete or budget exhausted)."""
+        if session.done:
+            return True
+        step = self.plan_step(session)
+        observations = self.execute_step(session, step)
+        return self.apply_step(session, step, observations)
 
     # ---------------------------------------------------- sequential API ----
     def run_task(self, task: Task, task_seed: int = 0) -> TaskResult:

@@ -19,8 +19,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.toolgraph import ToolGraph, compile_calls
 from repro.core.tools import Tool, ToolRegistry
 from repro.env.tasks import Task, ToolCall
+from repro.env.tools_impl import TOOL_EFFECTS
 
 SYSTEM_PROMPT = (
     "You are the planning agent of the GeoLLM-Engine geospatial Copilot "
@@ -171,6 +173,13 @@ class PlannerConfig:
     derail_fs_factor: float = 0.82   # few-shot derails less often
     p_skip_side_effect: float = 0.08
     max_steps: int = 12
+    # tool-graph compiler: emit DAG-of-calls round-trips that fuse many
+    # virtual planner steps into one LLM request (DESIGN.md §Tool-graph
+    # compiler). The behaviour model is unchanged — the same next_step
+    # rng stream drives both modes — so workspace outcomes are bitwise
+    # identical to the linear planner; only round-trip/token accounting
+    # moves.
+    compile_plans: bool = False
 
     @property
     def name(self) -> str:
@@ -184,6 +193,24 @@ class PlanStep:
     calls: List[ToolCall]
     final: Optional[str] = None
     tool_not_found: bool = False
+
+
+@dataclass
+class CompiledStep:
+    """One compiled planner round-trip: a hazard-DAG of tool calls that
+    fuses ``n_virtual`` consecutive linear planner steps, optionally
+    terminated by the final answer. ``graph`` node ids are assigned in
+    emission order, so ascending node id == the linear execution order.
+    """
+    thought: str
+    graph: ToolGraph
+    final: Optional[str] = None
+    tool_not_found: bool = False
+    n_virtual: int = 0
+
+    @property
+    def calls(self) -> List[ToolCall]:
+        return [ToolCall(n.tool, n.args) for n in self.graph.nodes]
 
 
 class ScriptedPlanner:
@@ -310,6 +337,50 @@ class ScriptedPlanner:
                 self._stages_entered += 1
         return PlanStep(thought, list(calls))
 
+    def next_compiled_step(self, task: Task, visible_tools: Dict[str, Tool],
+                           history: List[str], max_virtual: int
+                           ) -> CompiledStep:
+        """Compile up to ``max_virtual`` consecutive linear planner steps
+        into ONE round-trip: a hazard-DAG of their calls (deps inferred
+        from workspace data-flow) plus the final answer when the plan
+        completes inside the window.
+
+        Determinism: this calls the SAME ``next_step`` the linear path
+        uses, in the same order, so the competence-model rng stream
+        (derail, slips, aggregation draws) is consumed identically —
+        compilation changes round-trip structure, never behaviour.
+        Collection stops at a TOOL_NOT_FOUND boundary: the fallback
+        swaps the visible catalog between round-trips, so it must not
+        share a completion with pre-fallback calls. The boundary peek is
+        free — the TOOL_NOT_FOUND branch of ``next_step`` draws no rng
+        and leaves the plan untouched, so the next round-trip re-emits
+        it verbatim.
+        """
+        thought = ""
+        final: Optional[str] = None
+        tool_not_found = False
+        calls: List[ToolCall] = []
+        n_virtual = 0
+        while n_virtual < max_virtual:
+            step = self.next_step(task, visible_tools, history)
+            if n_virtual == 0:
+                thought = step.thought
+            if step.tool_not_found:
+                if not calls:           # a bare TOOL_NOT_FOUND round-trip
+                    tool_not_found = True
+                    n_virtual += 1
+                break
+            if step.final is not None:  # fold the final into this round
+                final = step.final
+                n_virtual += 1
+                break
+            calls.extend(step.calls)
+            n_virtual += 1
+        graph = compile_calls(calls, TOOL_EFFECTS)
+        return CompiledStep(thought, graph, final=final,
+                            tool_not_found=tool_not_found,
+                            n_virtual=n_virtual)
+
     def note_fallback(self):
         """Called by the agent after a full-catalog fallback: the context
         switch occasionally confuses the proxy planner (paper: 'slight
@@ -349,13 +420,20 @@ class ScriptedPlanner:
         return "\n".join(parts)
 
     @staticmethod
-    def serialize_completion(step: PlanStep) -> str:
+    def serialize_completion(step) -> str:
+        """Serialize a PlanStep or CompiledStep emission. Compiled
+        round-trips emit the DAG itself — node ids and deps included —
+        so the token accounting honestly prices the fused program the
+        planner would have to write out."""
         parts = []
         if step.thought:
             parts.append(step.thought)
         if step.tool_not_found:
             parts.append("TOOL_NOT_FOUND")
-        if step.calls:
+        if isinstance(step, CompiledStep):
+            if step.graph.nodes:
+                parts.append("Action: " + json.dumps(step.graph.to_json()))
+        elif step.calls:
             parts.append("Action: " + json.dumps(
                 [{"tool": c.tool, "args": c.args} for c in step.calls]))
         if step.final:

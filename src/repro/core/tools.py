@@ -69,6 +69,17 @@ class ToolRegistry:
     def get(self, name: str) -> Optional[Tool]:
         return self.tools.get(name)
 
+    def names(self) -> List[str]:
+        """Sorted tool names — the known-tool universe the tool-graph
+        compiler validates node references against."""
+        return sorted(self.tools)
+
+    def validate_graph(self, graph):
+        """Validate a ToolGraph against this catalog: typed
+        ToolGraphError on unknown tools, dangling deps, duplicate node
+        ids or cycles (core/toolgraph.py)."""
+        return graph.validate(known_tools=self.names())
+
 
 def _t(name, lib, desc, params, returns="object"):
     return Tool(name, lib, desc, tuple(params), returns)

@@ -10,20 +10,35 @@ model* standing in for real model inference: detections have per-class
 recall/precision, land-cover adds jitter, VQA answers pass through a
 temperature-controlled word dropout (the paper attributes its VQA metric
 wobble to non-zero temperature).
+
+Fused execution (the tool-graph compiler, DESIGN.md §Tool-graph
+compiler): ``execute_graph`` runs one session's compiled ``ToolGraph``
+in topological waves; ``execute_graph_batch`` merges the graphs of many
+co-resident sessions into shared waves — the pipeline's cross-session
+execution path. ``TOOL_EFFECTS`` is the authoritative per-tool
+read/write table the compiler's hazard analysis runs on; a tool
+implementation may only touch workspace state its entry declares.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.toolgraph import ToolEffects
 from repro.env.world import LANDCOVER_CLASSES, World
 
 
 class ToolError(Exception):
     pass
+
+
+class WorkspaceHazardError(ToolError):
+    """A fused batch would execute two graphs against aliased state
+    (shared Workspace object or duplicate session key): cross-session
+    fusion is only sound when per-session workspaces are disjoint."""
 
 
 @dataclass
@@ -40,6 +55,11 @@ class Workspace:
     temperature: float = 0.3
 
     def obs(self, payload) -> str:
+        """Render one tool observation. Ordering contract: batched/fused
+        executions return observations sorted by ``(session id, node
+        id)`` — never by dict or completion order — so reconciliation
+        into session histories is reproducible (see
+        ``execute_graph_batch``)."""
         s = str(payload)
         return s if len(s) < 900 else s[:900] + "…"
 
@@ -273,3 +293,182 @@ def execute_tool(ws: Workspace, name: str, args: Dict[str, Any]) -> str:
         return ws.obs({"table": "rendered"})
 
     raise ToolError(f"unknown tool: {name}")
+
+
+# ===================================================== fused execution =====
+#
+# Hazard alphabet — the named workspace resources the compiler's dep
+# inference runs over. ``world`` state is read-only at execution time
+# (no tool mutates it) so world reads never create hazards; ``rng`` is
+# modelled as a WRITE because consuming the seeded stream reorders every
+# later draw.
+#
+#   handles     ws.handles               (loaded image handle list)
+#   map         ws.map_layers            (additive layer stack)
+#   detections  ws.detections            (per-handle detection results)
+#   landcover   ws.landcover             (per-handle class fractions)
+#   artifacts   ws.artifacts             (export/screenshot/table store)
+#   answer      ws.last_answer           (the user-visible answer)
+#   ui          ws.ui_state              (browser/UI session state)
+#   rng         ws.rng                   (seeded noise-model stream)
+
+def _eff(reads: str = "", writes: str = "") -> ToolEffects:
+    return ToolEffects(frozenset(reads.split()), frozenset(writes.split()))
+
+
+TOOL_EFFECTS: Dict[str, ToolEffects] = {
+    # SQL_apis: pure catalog reads — never hazard with anything
+    "sql_query_images":   _eff(),
+    "sql_query_regions":  _eff(),
+    "sql_count":          _eff(),
+    "sql_distinct":       _eff(),
+    "sql_sample":         _eff(),
+    # data_apis
+    "load_images":        _eff(writes="handles"),
+    "filter_clouds":      _eff(reads="handles", writes="handles"),
+    "filter_date":        _eff(reads="handles", writes="handles"),
+    "mosaic":             _eff(reads="handles", writes="artifacts"),
+    "reproject":          _eff(reads="handles", writes="artifacts"),
+    "compute_ndvi":       _eff(reads="handles", writes="artifacts"),
+    "band_math":          _eff(reads="handles", writes="artifacts"),
+    "export_geotiff":     _eff(reads="handles", writes="artifacts"),
+    # map_apis
+    "plot_map":           _eff(reads="handles", writes="map"),
+    "add_layer":          _eff(writes="map"),
+    "draw_bboxes":        _eff(writes="map"),
+    "heatmap":            _eff(writes="map"),
+    "plot_histogram":     _eff(writes="map"),
+    "plot_timeseries":    _eff(writes="map"),
+    "screenshot_map":     _eff(reads="map", writes="artifacts"),
+    # detect_apis (model-backed: seeded noise => rng writers)
+    "detect_objects":     _eff(reads="handles", writes="detections rng"),
+    "count_objects":      _eff(reads="handles", writes="detections rng"),
+    "change_detection":   _eff(writes="rng"),
+    "suggest_model":      _eff(),
+    # landcover_apis
+    "classify_landcover": _eff(reads="handles", writes="landcover rng"),
+    "landcover_stats":    _eff(reads="landcover", writes="answer"),
+    "compare_landcover":  _eff(),
+    # vqa_apis / vision_apis (model-backed)
+    "visual_qa":          _eff(reads="handles", writes="answer rng"),
+    "caption_image":      _eff(reads="handles", writes="answer rng"),
+    "compare_images_qa":  _eff(reads="handles", writes="answer rng"),
+    "describe_scene":     _eff(reads="handles", writes="answer rng"),
+    "ground_phrase":      _eff(),
+    # web_apis
+    "web_search":         _eff(),
+    "open_url":           _eff(writes="ui answer"),
+    "download_file":      _eff(writes="artifacts"),
+    "post_form":          _eff(writes="artifacts"),
+    # UI_apis
+    "ui_click":           _eff(writes="ui"),
+    "ui_type":            _eff(writes="ui"),
+    "ui_scroll":          _eff(writes="ui"),
+    "ui_read":            _eff(writes="ui"),
+    "ui_open_panel":      _eff(writes="ui"),
+    # wiki_apis
+    "wiki_search":        _eff(),
+    "wiki_get":           _eff(writes="answer rng"),
+    "wiki_summarize":     _eff(writes="answer rng"),
+    # speech_apis
+    "transcribe_audio":   _eff(writes="answer rng"),
+    "translate_audio":    _eff(writes="answer rng"),
+    # code_apis
+    "run_python":         _eff(writes="artifacts"),
+    "tabulate":           _eff(writes="artifacts"),
+}
+
+
+def tool_effects(name: str) -> ToolEffects:
+    """Effects lookup for the compiler; unknown tools raise ToolError
+    (mirrors ``execute_tool`` semantics at compile time)."""
+    try:
+        return TOOL_EFFECTS[name]
+    except KeyError:
+        raise ToolError(f"unknown tool: {name}")
+
+
+@dataclass(frozen=True)
+class NodeObservation:
+    """One executed node's result, addressed for reconciliation."""
+    node_id: int
+    tool: str
+    text: str                 # "{tool} -> {obs}" or "{tool} -> ERROR: .."
+    ok: bool
+
+
+def _run_node(ws: Workspace, node) -> NodeObservation:
+    try:
+        out = execute_tool(ws, node.tool, node.args)
+        return NodeObservation(node.node_id, node.tool,
+                               f"{node.tool} -> {out}", True)
+    except ToolError as e:
+        # an erroring node does NOT cancel its dependents: the linear
+        # agent loop executes every call of a step regardless of earlier
+        # errors, and fused execution must be observation-equivalent.
+        # Tools guard their own preconditions (E1xx errors).
+        return NodeObservation(node.node_id, node.tool,
+                               f"{node.tool} -> ERROR: {e}", False)
+
+
+def execute_graph(ws: Workspace, graph) -> List[NodeObservation]:
+    """Execute one session's compiled graph in topological waves.
+
+    Within a wave nodes run in ascending node-id order; observations are
+    returned sorted by node id (= planner emission order) regardless of
+    wave placement, so reconciliation is schedule-independent. Hazard
+    deps guarantee the end state is bitwise identical to sequential
+    emission-order execution (DESIGN.md §Tool-graph compiler).
+    """
+    out: List[NodeObservation] = []
+    for wave in graph.wave_schedule():
+        for nid in wave:
+            out.append(_run_node(ws, graph.node(nid)))
+    out.sort(key=lambda o: o.node_id)
+    return out
+
+
+def execute_graph_batch(entries: Sequence[Tuple[int, Workspace, Any]]
+                        ) -> Dict[int, List[NodeObservation]]:
+    """Fused cross-session execution: one batched run over the graphs of
+    many co-resident sessions.
+
+    ``entries`` is ``(session_key, workspace, graph)`` triples. Wave w
+    of the batch executes every session's wave-w nodes in ``(session
+    key, node id)`` order — the documented, stable observation order; the
+    returned dict maps each session key to its observations sorted by
+    node id, bitwise identical to running ``execute_graph`` per session
+    alone (workspaces are disjoint, so sessions cannot hazard with each
+    other).
+
+    Hazard detection on shared state: duplicate session keys or two
+    entries aliasing one ``Workspace`` object raise
+    ``WorkspaceHazardError`` before anything executes.
+    """
+    seen_keys: set = set()
+    seen_ws: Dict[int, int] = {}
+    for key, ws, _ in entries:
+        if key in seen_keys:
+            raise WorkspaceHazardError(
+                f"duplicate session key {key} in fused batch")
+        seen_keys.add(key)
+        if id(ws) in seen_ws:
+            raise WorkspaceHazardError(
+                f"sessions {seen_ws[id(ws)]} and {key} share one "
+                f"Workspace — fused waves would interleave hazards")
+        seen_ws[id(ws)] = key
+
+    ordered = sorted(entries, key=lambda e: e[0])
+    schedules = [(key, ws, graph, graph.wave_schedule())
+                 for key, ws, graph in ordered]
+    results: Dict[int, List[NodeObservation]] = {
+        key: [] for key, _, _, _ in schedules}
+    n_waves = max((len(s) for _, _, _, s in schedules), default=0)
+    for w in range(n_waves):
+        for key, ws, graph, sched in schedules:
+            if w < len(sched):
+                for nid in sched[w]:
+                    results[key].append(_run_node(ws, graph.node(nid)))
+    for key in results:
+        results[key].sort(key=lambda o: o.node_id)
+    return results

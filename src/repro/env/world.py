@@ -47,6 +47,30 @@ class World:
     def catalog_rows(self) -> List[ImageRecord]:
         return list(self.images.values())
 
+    def fingerprint(self) -> str:
+        """Stable digest of all shared world state.
+
+        The tool-graph compiler's cross-session fusion is only sound
+        because the World is READ-ONLY at execution time — every mutable
+        resource lives in the per-session Workspace (the hazard alphabet
+        in env/tools_impl.TOOL_EFFECTS). Parity tests snapshot this
+        before/after fused runs to hold the executors to that contract.
+        """
+        import hashlib
+        h = hashlib.sha256()
+        for iid in sorted(self.images):
+            r = self.images[iid]
+            h.update(repr((r.image_id, r.sensor, r.region, r.date,
+                           r.cloud, sorted(r.objects.items()),
+                           sorted(r.landcover.items()),
+                           r.caption)).encode())
+        for part in (sorted(self.regions.items()), sorted(self.wiki.items()),
+                     sorted((u, sorted(p.items()))
+                            for u, p in self.web.items()),
+                     sorted(self.audio.items()), self.seed):
+            h.update(repr(part).encode())
+        return h.hexdigest()
+
 
 def _date(rng) -> str:
     y = int(rng.integers(2019, 2024))

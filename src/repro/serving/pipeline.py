@@ -45,8 +45,10 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.agent import Agent, AgentSession, TaskResult
+from repro.core.planner import CompiledStep
 from repro.env.evaluator import EvalReport, evaluate_results
 from repro.env.tasks import Task
+from repro.env.tools_impl import execute_graph_batch
 from repro.serving.sampling import SamplerConfig
 
 
@@ -58,6 +60,14 @@ class PipelineConfig:
     # the InferenceEngine with per-intent prefix caching
     engine_turns: bool = True
     engine_max_new_tokens: int = 8
+    # cross-session fusion: when the agent's planner compiles plans
+    # (PlannerConfig.compile_plans), merge every active session's
+    # round-trip DAG into ONE batched tool execution per tick
+    # (env/tools_impl.execute_graph_batch). Per-session outcomes are
+    # bitwise identical either way (disjoint workspaces + fixed
+    # (session, node) reconciliation order); this just makes the wave
+    # the execution unit, the way a fleet batches its tool backends.
+    fuse_sessions: bool = True
 
 
 @dataclass
@@ -74,6 +84,13 @@ class PipelineStats:
     engine_kv_mode: str = ""     # "dense" | "paged" KV-cache manager
     engine_spec_k: int = 0       # draft tokens/round (0 = spec off)
 
+    # tool-graph compiler (cross-session fused execution)
+    fused_batches: int = 0       # batched execute_graph_batch calls
+    fused_calls: int = 0         # tool calls executed inside them
+    fused_sessions_peak: int = 0  # most sessions fused into one batch
+    plan_round_trips: int = 0    # planner LLM requests across sessions
+    plan_virtual_steps: int = 0  # linear-equivalent steps they covered
+
     def summary(self) -> Dict[str, float]:
         sizes = self.gate_batch_sizes or [0]
         return {"admitted": self.admitted,
@@ -85,7 +102,12 @@ class PipelineStats:
                 "engine_backend": self.engine_backend,
                 "engine_replicas": self.engine_replicas,
                 "engine_kv_mode": self.engine_kv_mode,
-                "engine_spec_k": self.engine_spec_k}
+                "engine_spec_k": self.engine_spec_k,
+                "fused_batches": self.fused_batches,
+                "fused_calls": self.fused_calls,
+                "fused_sessions_peak": self.fused_sessions_peak,
+                "plan_round_trips": self.plan_round_trips,
+                "plan_virtual_steps": self.plan_virtual_steps}
 
 
 class GeckOptPipeline:
@@ -164,6 +186,42 @@ class GeckOptPipeline:
         self._engine_sessions.append(es)
         self.stats.engine_turns += 1
 
+    def _tick_sessions(self, active: List[AgentSession]
+                       ) -> List[AgentSession]:
+        """Advance every active session one planner round-trip; returns
+        the sessions that finished this tick.
+
+        With the tool-graph compiler on (and ``fuse_sessions``), the
+        tick is three phases instead of per-session loops: every session
+        plans its compiled round-trip, ALL their DAGs execute in one
+        fused ``execute_graph_batch`` wave run, and observations
+        reconcile back per session in (session, node id) order — the
+        pipeline's cross-session execution path. Outcomes are bitwise
+        identical to stepping each session alone (disjoint workspaces).
+        """
+        fusing = (self.config.fuse_sessions
+                  and self.agent.planner_cfg.compile_plans)
+        if not fusing:
+            return [s for s in active if self.agent.step_session(s)]
+        planned = [(s, self.agent.plan_step(s)) for s in active]
+        entries = [(s.index, s.workspace, step.graph)
+                   for s, step in planned
+                   if isinstance(step, CompiledStep) and step.graph.nodes]
+        observations = execute_graph_batch(entries) if entries else {}
+        if entries:
+            self.stats.fused_batches += 1
+            self.stats.fused_calls += sum(
+                len(g.nodes) for _, _, g in entries)
+            self.stats.fused_sessions_peak = max(
+                self.stats.fused_sessions_peak, len(entries))
+        self.stats.plan_round_trips += len(planned)
+        self.stats.plan_virtual_steps += sum(
+            step.n_virtual for _, step in planned
+            if isinstance(step, CompiledStep))
+        return [s for s, step in planned
+                if self.agent.apply_step(s, step,
+                                         observations.get(s.index))]
+
     # ------------------------------------------------------------- run ----
     def run(self, tasks: Sequence[Task]) -> List[TaskResult]:
         """Run every task to completion; TaskResults in task order."""
@@ -183,13 +241,11 @@ class GeckOptPipeline:
             if self.engine is not None:
                 # overlap engine decode with agent ticks
                 finished_turns.extend(self.engine.step())
-            still: List[AgentSession] = []
-            for session in active:
-                if self.agent.step_session(session):
-                    results[session.index] = session.result()
-                else:
-                    still.append(session)
-            active = still
+            finished = self._tick_sessions(active)
+            for session in finished:
+                results[session.index] = session.result()
+            done_ids = {id(s) for s in finished}
+            active = [s for s in active if id(s) not in done_ids]
         if self.engine is not None:
             finished_turns.extend(self.engine.run_until_done())
             for es in self._engine_sessions:

@@ -114,3 +114,33 @@ def test_aggregation_monotone_in_toolset_size():
 def test_keyword_intent_reasonable(tasks):
     acc = np.mean([keyword_intent(t.query) == t.intent for t in tasks])
     assert acc > 0.9
+
+
+# --------------------------------------- tool-graph compiler regression ----
+
+def test_compiler_moves_only_steps_and_tokens(world, tasks, intent_map):
+    """Table-2 regression for the tool-graph compiler: in BOTH the gated
+    and ungated cells, turning compile_plans on must leave every quality
+    metric (and the fallback rate) exactly unchanged while cutting
+    planner round-trips >= 1.5x and total tokens."""
+    libs = DEFAULT_REGISTRY.libraries()
+    reports = {}
+    for gated in (False, True):
+        for compiled in (False, True):
+            cfg = PlannerConfig(mode="react", few_shot=False,
+                                compile_plans=compiled)
+            gate = IntentGate(intent_map, ScriptedIntentClassifier(
+                0.97, np.random.default_rng(0)), libs) if gated else None
+            reports[(gated, compiled)] = evaluate(
+                Agent(DEFAULT_REGISTRY, world, cfg, gate=gate, seed=0),
+                tasks, "cell")
+    for gated in (False, True):
+        lin, comp = reports[(gated, False)], reports[(gated, True)]
+        quality = lambda r: (r.correct_rate, r.success_rate, r.det_f1,
+                             r.lcc_r, r.vqa_rouge_l, r.fallback_rate)
+        assert quality(lin) == quality(comp)
+        assert lin.steps_per_task / comp.steps_per_task >= 1.5
+        assert comp.tokens_per_task < lin.tokens_per_task
+    # gating still compounds with compilation (the GeckOpt claim)
+    assert reports[(True, True)].tokens_per_task < \
+        reports[(False, True)].tokens_per_task

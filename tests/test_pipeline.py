@@ -148,6 +148,93 @@ def test_run_task_unchanged_by_session_refactor(world, tasks):
     assert r1.completed_plan == r2.completed_plan
 
 
+# ---------------------------------------- cross-session fused execution ----
+
+@pytest.mark.parametrize("accuracy", [0.97, 0.0])
+def test_fused_pipeline_identical_to_solo_compiled(world, tasks,
+                                                   intent_map, accuracy):
+    """With the tool-graph compiler on, the pipeline fuses every
+    co-resident session's DAG into one batched execution per tick; each
+    session's TaskResult (ledger included) must be bitwise identical to
+    running it alone. accuracy=0.0 forces the TOOL_NOT_FOUND fallback
+    path through the fused tick."""
+    cfg = PlannerConfig(mode="react", few_shot=False, compile_plans=True)
+    libs = DEFAULT_REGISTRY.libraries()
+
+    def agent():
+        gate = IntentGate(intent_map, ScriptedIntentClassifier(
+            accuracy, np.random.default_rng(0)), libs)
+        return Agent(DEFAULT_REGISTRY, world, cfg, gate=gate, seed=0)
+
+    a = agent()
+    solo = [a.run_task(t, task_seed=i) for i, t in enumerate(tasks)]
+    pipe = GeckOptPipeline(agent(), PipelineConfig(max_concurrent=6,
+                                                   engine_turns=False))
+    fused = pipe.run(tasks)
+    assert len(fused) == len(solo)
+    for s, f in zip(solo, fused):
+        assert s.executed_tools == f.executed_tools
+        assert s.completed_plan == f.completed_plan
+        assert s.fallback_used == f.fallback_used
+        assert s.intent_predicted == f.intent_predicted
+        assert [(e.kind, e.prompt_tokens, e.completion_tokens,
+                 e.tool_calls, e.virtual_steps)
+                for e in s.ledger.entries] == \
+               [(e.kind, e.prompt_tokens, e.completion_tokens,
+                 e.tool_calls, e.virtual_steps)
+                for e in f.ledger.entries]
+        assert s.workspace.rng.bit_generator.state == \
+            f.workspace.rng.bit_generator.state
+    # the fused path actually ran, and round-trips beat virtual steps
+    assert pipe.stats.fused_batches > 0
+    assert pipe.stats.fused_sessions_peak > 1
+    assert pipe.stats.plan_round_trips < pipe.stats.plan_virtual_steps
+    if accuracy == 0.0:
+        # the misrouted regime exercised the fallback under fusion
+        assert sum(r.fallback_used for r in fused) > 0
+
+
+def test_fused_wave_error_does_not_poison_siblings(world):
+    """A ToolError inside one session's graph must leave a co-fused
+    sibling session's observations and workspace bitwise identical to
+    its solo run."""
+    from repro.core.toolgraph import compile_calls
+    from repro.env.tasks import ToolCall
+    from repro.env.tools_impl import (TOOL_EFFECTS, Workspace,
+                                      execute_graph, execute_graph_batch)
+    bad = compile_calls([ToolCall("detect_objects", {})],
+                        TOOL_EFFECTS)          # no handles -> ToolError
+    good = compile_calls([ToolCall("load_images", {"image_ids": []}),
+                          ToolCall("wiki_search", {"query": "port"}),
+                          ToolCall("plot_map", {})], TOOL_EFFECTS)
+
+    solo_ws = Workspace(world=world, rng=np.random.default_rng(5))
+    solo_obs = [(o.node_id, o.text, o.ok)
+                for o in execute_graph(solo_ws, good)]
+    ws_a = Workspace(world=world, rng=np.random.default_rng(9))
+    ws_b = Workspace(world=world, rng=np.random.default_rng(5))
+    out = execute_graph_batch([(0, ws_a, bad), (1, ws_b, good)])
+    assert not out[0][0].ok and "ERROR" in out[0][0].text
+    assert [(o.node_id, o.text, o.ok) for o in out[1]] == solo_obs
+    assert ws_b.rng.bit_generator.state == solo_ws.rng.bit_generator.state
+    assert (ws_b.handles, ws_b.map_layers, ws_b.last_answer) == \
+        (solo_ws.handles, solo_ws.map_layers, solo_ws.last_answer)
+
+
+def test_fused_pipeline_leaves_world_untouched(world, tasks, intent_map):
+    """Cross-session fusion is only sound because the World is
+    read-only; the fingerprint must not move across a fused run."""
+    cfg = PlannerConfig(mode="cot", few_shot=False, compile_plans=True)
+    gate = IntentGate(intent_map, ScriptedIntentClassifier(
+        0.97, np.random.default_rng(0)), DEFAULT_REGISTRY.libraries())
+    before = world.fingerprint()
+    GeckOptPipeline(Agent(DEFAULT_REGISTRY, world, cfg, gate=gate,
+                          seed=0),
+                    PipelineConfig(max_concurrent=8,
+                                   engine_turns=False)).run(tasks[:12])
+    assert world.fingerprint() == before
+
+
 # ------------------------------------------------- engine prefix cache ----
 
 def test_engine_prefix_cache_outputs_identical(planner):

@@ -1,0 +1,323 @@
+"""Tool-graph compiler: DAG validation/scheduling invariants and the
+fused-execution ≡ sequential-execution parity contract.
+
+Driven twice — seeded random graphs and call streams (always run) and
+hypothesis property tests (run when the dev dependency is installed) —
+plus end-to-end parity sweeps over real benchmark tasks: the compiled
+planner and the fused batch executor must be bitwise invisible to every
+observable (workspace state, rng stream, observations, history,
+quality metrics).
+"""
+import numpy as np
+import pytest
+
+from repro.core.agent import Agent
+from repro.core.gate import IntentGate, ScriptedIntentClassifier
+from repro.core.intents import build_intent_map
+from repro.core.planner import CompiledStep, PlannerConfig, ScriptedPlanner
+from repro.core.tools import DEFAULT_REGISTRY
+from repro.core.toolgraph import (CycleError, DuplicateNodeError,
+                                  ToolEffects, ToolGraph, ToolGraphError,
+                                  ToolNode, UnknownDepError,
+                                  UnknownToolError, compile_calls,
+                                  infer_deps)
+from repro.env.tasks import ToolCall, make_benchmark
+from repro.env.tools_impl import (TOOL_EFFECTS, ToolError, Workspace,
+                                  WorkspaceHazardError, execute_graph,
+                                  execute_graph_batch, execute_tool,
+                                  tool_effects)
+from repro.env.world import build_world
+
+
+@pytest.fixture(scope="module")
+def world():
+    return build_world(0, n_images=200)
+
+
+@pytest.fixture(scope="module")
+def tasks(world):
+    return make_benchmark(world, 32)
+
+
+def _ws(world, seed=0):
+    return Workspace(world=world, rng=np.random.default_rng(seed))
+
+
+def _ws_state(ws):
+    """Every observable a tool can touch, rng stream included."""
+    return (ws.handles, ws.map_layers, ws.detections, ws.landcover,
+            ws.artifacts, ws.last_answer, ws.ui_state,
+            ws.rng.bit_generator.state)
+
+
+# ------------------------------------------------------ DAG validation ----
+
+def test_schedule_waves_respect_deps_and_order():
+    g = ToolGraph([ToolNode(0, "a"), ToolNode(1, "b", deps=(0,)),
+                   ToolNode(2, "c"), ToolNode(3, "d", deps=(1, 2))])
+    assert g.wave_schedule() == [[0, 2], [1], [3]]
+
+
+def test_schedule_is_input_order_independent():
+    nodes = [ToolNode(0, "a"), ToolNode(1, "b", deps=(0,)),
+             ToolNode(2, "c", deps=(0,)), ToolNode(3, "d", deps=(1, 2))]
+    want = ToolGraph(nodes).wave_schedule()
+    assert ToolGraph(nodes[::-1]).wave_schedule() == want
+    assert ToolGraph([nodes[2], nodes[0], nodes[3], nodes[1]]
+                     ).wave_schedule() == want
+
+
+def test_cycle_raises_typed_error():
+    g = ToolGraph([ToolNode(0, "a", deps=(1,)),
+                   ToolNode(1, "b", deps=(0,))])
+    with pytest.raises(CycleError):
+        g.wave_schedule()
+    with pytest.raises(ToolGraphError):       # subclass relationship
+        g.validate()
+
+
+def test_self_dependency_raises():
+    with pytest.raises(CycleError):
+        ToolGraph([ToolNode(0, "a", deps=(0,))]).wave_schedule()
+
+
+def test_unknown_tool_raises_at_validate_and_compile():
+    g = ToolGraph([ToolNode(0, "no_such_tool")])
+    with pytest.raises(UnknownToolError):
+        g.validate(known_tools=DEFAULT_REGISTRY.names())
+    with pytest.raises(UnknownToolError):
+        DEFAULT_REGISTRY.validate_graph(g)
+    with pytest.raises(UnknownToolError):
+        compile_calls([ToolCall("no_such_tool", {})], TOOL_EFFECTS)
+    # the env-side lookup mirrors execute_tool semantics instead
+    with pytest.raises(ToolError):
+        tool_effects("no_such_tool")
+
+
+def test_dangling_dep_and_duplicate_id_raise():
+    with pytest.raises(UnknownDepError):
+        ToolGraph([ToolNode(0, "a", deps=(7,))]).validate()
+    with pytest.raises(DuplicateNodeError):
+        ToolGraph([ToolNode(0, "a"), ToolNode(0, "b")]).validate()
+
+
+def test_random_dags_schedule_invariants():
+    """Seeded random DAGs: every wave schedule is a permutation of the
+    node ids, no node is scheduled before a dependency, and waves are
+    exactly the longest-chain depths."""
+    rng = np.random.default_rng(7)
+    for _ in range(50):
+        n = int(rng.integers(1, 14))
+        nodes = []
+        for i in range(n):
+            k = int(rng.integers(0, min(i, 3) + 1))
+            deps = tuple(sorted(rng.choice(i, size=k, replace=False))
+                         ) if i and k else ()
+            nodes.append(ToolNode(i, f"t{i}", deps=deps))
+        g = ToolGraph(nodes)
+        waves = g.validate().wave_schedule()
+        flat = [i for w in waves for i in w]
+        assert sorted(flat) == list(range(n))
+        pos = {nid: w for w, wave in enumerate(waves) for nid in wave}
+        for node in nodes:
+            for d in node.deps:
+                assert pos[d] < pos[node.node_id]
+            want = (max((pos[d] for d in node.deps), default=-1) + 1)
+            assert pos[node.node_id] == want
+
+
+def test_hypothesis_random_dags_schedule_invariants():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(deadline=None, max_examples=60)
+    @hyp.given(st.data())
+    def run(data):
+        n = data.draw(st.integers(1, 12))
+        nodes = []
+        for i in range(n):
+            deps = tuple(data.draw(st.sets(st.integers(0, i - 1),
+                                           max_size=3))) if i else ()
+            nodes.append(ToolNode(i, f"t{i}", deps=deps))
+        waves = ToolGraph(nodes).validate().wave_schedule()
+        pos = {nid: w for w, wave in enumerate(waves) for nid in wave}
+        flat = [i for w in waves for i in w]
+        assert sorted(flat) == list(range(n))
+        for node in nodes:
+            assert all(pos[d] < pos[node.node_id] for d in node.deps)
+
+    run()
+
+
+# ------------------------------------------------------- dep inference ----
+
+def test_effects_table_covers_exactly_the_registry():
+    assert set(TOOL_EFFECTS) == set(DEFAULT_REGISTRY.names())
+
+
+def test_infer_deps_serializes_hazards():
+    calls = [ToolCall("load_images", {"image_ids": [0]}),   # writes handles
+             ToolCall("filter_clouds", {}),                 # rw handles
+             ToolCall("wiki_search", {"query": "x"}),       # writes answer
+             ToolCall("detect_objects", {})]                # reads handles
+    g = compile_calls(calls, TOOL_EFFECTS)
+    assert g.node(1).deps == (0,)            # RAW+WAW on handles
+    assert g.node(2).deps == ()              # pure catalog read
+    assert 1 in g.node(3).deps               # reads handles after writer
+    assert 2 not in g.node(3).deps           # no shared resource
+
+
+def test_infer_deps_rng_serializes_stochastic_tools():
+    """Every pair of rng-writing tools must be chained, whatever other
+    resources they touch — their relative order changes draws."""
+    calls = [ToolCall("transcribe_audio", {}),   # answer+rng writer
+             ToolCall("change_detection", {})]   # rng-only writer
+    g = compile_calls(calls, TOOL_EFFECTS)
+    assert g.node(1).deps == (0,)
+    assert g.wave_schedule() == [[0], [1]]
+
+
+def test_infer_deps_war_orders_reader_before_writer():
+    eff = {"r": ToolEffects(reads=frozenset({"x"})),
+           "w": ToolEffects(writes=frozenset({"x"}))}
+    g = infer_deps([ToolCall("w", {}), ToolCall("r", {}),
+                    ToolCall("w", {})], eff)
+    assert g.node(1).deps == (0,)
+    assert g.node(2).deps == (0, 1)          # WAW on 0, WAR on 1
+
+
+def test_infer_deps_accepts_callable_effects():
+    g = infer_deps([ToolCall("anything", {})],
+                   lambda t: ToolEffects())
+    assert g.node(0).deps == ()
+
+
+# ------------------------------------ fused ≡ sequential execution --------
+
+def _random_call_stream(rng, n):
+    names = DEFAULT_REGISTRY.names()
+    return [ToolCall(names[int(rng.integers(0, len(names)))], {})
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_graph_execution_bitwise_equals_sequential(world, seed):
+    """Any compiled call stream: wave execution must leave the workspace
+    (rng stream included) and the observation list bitwise identical to
+    naive emission-order execution."""
+    rng = np.random.default_rng(seed)
+    calls = _random_call_stream(rng, int(rng.integers(2, 12)))
+    graph = compile_calls(calls, TOOL_EFFECTS)
+
+    ws_seq = _ws(world, seed)
+    seq_obs = []
+    for i, c in enumerate(calls):
+        try:
+            out = execute_tool(ws_seq, c.tool, c.args)
+            seq_obs.append((i, f"{c.tool} -> {out}", True))
+        except Exception as e:
+            seq_obs.append((i, f"{c.tool} -> ERROR: {e}", False))
+
+    ws_dag = _ws(world, seed)
+    dag_obs = [(o.node_id, o.text, o.ok)
+               for o in execute_graph(ws_dag, graph)]
+    assert dag_obs == seq_obs
+    assert _ws_state(ws_dag) == _ws_state(ws_seq)
+
+
+def test_batch_execution_matches_solo_and_sorts_observations(world):
+    """A fused multi-session batch must reproduce each session's solo
+    run exactly, return observations sorted by node id, and be invariant
+    to entry order."""
+    def entry(seed):
+        rng = np.random.default_rng(100 + seed)
+        calls = _random_call_stream(rng, 6)
+        return _ws(world, seed), compile_calls(calls, TOOL_EFFECTS)
+
+    solo = {}
+    for s in range(4):
+        ws, g = entry(s)
+        solo[s] = ([(o.node_id, o.text, o.ok)
+                    for o in execute_graph(ws, g)], _ws_state(ws))
+
+    for order in ([0, 1, 2, 3], [3, 1, 0, 2]):
+        entries = {}
+        for s in order:
+            ws, g = entry(s)
+            entries[s] = (ws, g)
+        out = execute_graph_batch(
+            [(s, entries[s][0], entries[s][1]) for s in order])
+        assert sorted(out) == [0, 1, 2, 3]
+        for s in order:
+            obs = [(o.node_id, o.text, o.ok) for o in out[s]]
+            assert obs == solo[s][0]
+            assert obs == sorted(obs)             # node-id order
+            assert _ws_state(entries[s][0]) == solo[s][1]
+
+
+def test_batch_rejects_aliased_workspaces_and_duplicate_keys(world):
+    ws = _ws(world)
+    g = compile_calls([ToolCall("wiki_search", {"query": "x"})],
+                      TOOL_EFFECTS)
+    with pytest.raises(WorkspaceHazardError):
+        execute_graph_batch([(0, ws, g), (1, ws, g)])
+    with pytest.raises(WorkspaceHazardError):
+        execute_graph_batch([(0, ws, g), (0, _ws(world, 1), g)])
+
+
+def test_tool_error_does_not_cancel_independent_nodes(world):
+    """A failing node reports ERROR like the linear loop and its
+    non-dependent siblings still execute."""
+    calls = [ToolCall("detect_objects", {}),      # fails: no handles
+             ToolCall("wiki_search", {"query": "port of rotterdam"})]
+    graph = compile_calls(calls, TOOL_EFFECTS)
+    assert graph.node(1).deps == ()                # truly independent
+    ws = _ws(world)
+    obs = execute_graph(ws, graph)
+    assert [o.ok for o in obs] == [False, True]
+    assert "ERROR" in obs[0].text
+    assert obs[1].text.startswith("wiki_search -> ")   # sibling ran
+
+
+# --------------------------------- compiled planner end-to-end parity -----
+
+@pytest.mark.parametrize("mode,accuracy", [("react", 0.97), ("cot", 0.0)])
+def test_compiled_agent_bitwise_equals_linear(world, tasks, mode,
+                                              accuracy):
+    """compile_plans must not change ANY observable task outcome —
+    workspace end-state, rng stream, executed tools, completion,
+    fallback — across gate-accuracy regimes (0.0 forces the
+    TOOL_NOT_FOUND fallback path under compilation)."""
+    imap = build_intent_map(tasks, DEFAULT_REGISTRY)
+    libs = DEFAULT_REGISTRY.libraries()
+    for i, t in enumerate(tasks[:12]):
+        res = {}
+        for cp in (False, True):
+            cfg = PlannerConfig(mode=mode, few_shot=False,
+                                compile_plans=cp)
+            gate = IntentGate(imap, ScriptedIntentClassifier(
+                accuracy, np.random.default_rng(i)), libs)
+            res[cp] = Agent(DEFAULT_REGISTRY, world, cfg, gate=gate,
+                            seed=0).run_task(t, task_seed=i)
+        lin, comp = res[False], res[True]
+        assert _ws_state(lin.workspace) == _ws_state(comp.workspace)
+        assert lin.executed_tools == comp.executed_tools
+        assert lin.completed_plan == comp.completed_plan
+        assert lin.fallback_used == comp.fallback_used
+        assert lin.intent_predicted == comp.intent_predicted
+        # the budget is charged in virtual steps, not round-trips
+        assert comp.ledger.n_virtual_steps == lin.ledger.n_plan_steps
+        assert comp.ledger.n_round_trips <= lin.ledger.n_round_trips
+
+
+def test_compiled_planner_emits_validated_graphs(world, tasks):
+    cfg = PlannerConfig(mode="react", few_shot=False, compile_plans=True)
+    p = ScriptedPlanner(cfg, DEFAULT_REGISTRY, seed=3)
+    p.start_task(tasks[0])
+    step = p.next_compiled_step(tasks[0], dict(DEFAULT_REGISTRY.tools),
+                                [], cfg.max_steps)
+    assert isinstance(step, CompiledStep)
+    DEFAULT_REGISTRY.validate_graph(step.graph)    # typed errors if not
+    assert step.n_virtual >= len(step.graph.nodes) > 0
+    # the serialized completion prices the DAG (ids + deps included)
+    assert '"deps"' in p.serialize_completion(step)
