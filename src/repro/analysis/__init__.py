@@ -1,0 +1,19 @@
+"""Determinism & hazard static-analysis suite (``python -m
+repro.analysis``).
+
+Four analyzers over one shared finding model (DESIGN.md §Static
+analysis has the rule catalog):
+
+  * RL0xx effects race detector   — tool handlers vs TOOL_EFFECTS;
+  * RL1xx determinism lint        — wall-clock/stdlib-random/environ/
+    unordered-set/float-key hygiene in core, serving, env, kernels;
+  * RL2xx kernel contract checker — Pallas grid/BlockSpec/scalar-
+    prefetch/fp32-accumulator conventions;
+  * RL3xx backend registry checker — reference/pallas op parity.
+"""
+from repro.analysis.findings import (Finding, RULES, active,
+                                     make_finding)
+from repro.analysis.runner import run_paths, run_repo
+
+__all__ = ["Finding", "RULES", "active", "make_finding", "run_paths",
+           "run_repo"]

@@ -1,0 +1,184 @@
+"""RL101–RL105: determinism lint.
+
+The serving stack's headline claims — bitwise-identical replays, tick
+clocks, seeded rng everywhere — are conventions, not types. This pass
+makes them machine-checked in the deterministic directories (``core/``,
+``serving/``, ``env/``, ``kernels/``; ``benchmarks/`` and ``launch/``
+legitimately read wall-clock and are out of scope by default):
+
+  * RL101 — wall-clock reads: ``time.time/monotonic/perf_counter/
+    time_ns``, ``datetime.now/utcnow/today``. A tick-based system that
+    reads the wall clock is only *usually* reproducible.
+  * RL102 — stdlib ``random``: the module-global Mersenne stream is
+    process-wide mutable state; all randomness must flow through seeded
+    ``np.random.Generator`` / ``jax.random`` keys.
+  * RL103 — ``os.environ`` / ``os.getenv`` reads: behaviour keyed on
+    ambient environment diverges across machines and CI.
+  * RL104 — iterating a ``set``/``frozenset`` expression directly into
+    an ordered sink (for-loop, comprehension, ``list``/``tuple``/
+    ``join``/``enumerate``) without ``sorted(...)``: set order is
+    hash-seed-dependent across processes.
+  * RL105 — float-keyed dict literals/comprehensions: float key
+    identity is representation-fragile (``0.1 + 0.2`` lookups, JSON
+    round-trips stringify keys).
+
+Purely syntactic (AST) — no imports of the analyzed code.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.findings import Finding, make_finding
+
+_WALLCLOCK_TIME = {"time", "monotonic", "perf_counter", "time_ns",
+                   "monotonic_ns", "perf_counter_ns"}
+_WALLCLOCK_DT = {"now", "utcnow", "today"}
+_ORDERED_SINKS = {"list", "tuple", "enumerate"}
+
+
+def _dotted(node: ast.AST) -> str:
+    """'a.b.c' for nested attributes rooted at a Name, else ''."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("set", "frozenset"):
+        return True
+    return False
+
+
+class _Lint(ast.NodeVisitor):
+    def __init__(self, path: Path):
+        self.path = path
+        self.findings: List[Finding] = []
+
+    def _add(self, rule: str, line: int, message: str, hint: str) -> None:
+        self.findings.append(make_finding(rule, self.path, line,
+                                          message, hint))
+
+    # ------------------------------------------------------ RL101-103 ----
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+        head, _, tail = dotted.rpartition(".")
+        if head in ("time",) and tail in _WALLCLOCK_TIME:
+            self._add("RL101", node.lineno,
+                      f"wall-clock read {dotted}()",
+                      "inject a clock / use the tick counter; "
+                      "wall-clock belongs in launch/ and benchmarks/")
+        elif tail in _WALLCLOCK_DT and head.split(".")[-1] == "datetime":
+            self._add("RL101", node.lineno,
+                      f"wall-clock read {dotted}()",
+                      "pass timestamps in explicitly")
+        elif dotted in ("os.getenv",) or (
+                head == "os.environ" and tail == "get"):
+            self._add("RL103", node.lineno,
+                      f"environment read {dotted}(...)",
+                      "thread configuration through explicit config "
+                      "objects / PerfFlags")
+        elif head == "random" or dotted.startswith("random."):
+            self._add("RL102", node.lineno,
+                      f"stdlib random call {dotted}()",
+                      "use a seeded np.random.Generator or jax.random "
+                      "key threaded from the caller")
+        # ordered sinks over raw set expressions
+        if isinstance(node.func, ast.Name) \
+                and node.func.id in _ORDERED_SINKS and node.args \
+                and _is_set_expr(node.args[0]):
+            self._add("RL104", node.lineno,
+                      f"{node.func.id}() over an unordered set "
+                      f"expression",
+                      "wrap the set in sorted(...)")
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "join" and node.args \
+                and _is_set_expr(node.args[0]):
+            self._add("RL104", node.lineno,
+                      "str.join over an unordered set expression",
+                      "wrap the set in sorted(...)")
+        self.generic_visit(node)
+
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        if _dotted(node.value) == "os.environ" \
+                and isinstance(node.ctx, ast.Load):
+            self._add("RL103", node.lineno, "os.environ[...] read",
+                      "thread configuration through explicit config")
+        self.generic_visit(node)
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            if alias.name == "random":
+                self._add("RL102", node.lineno, "import random",
+                          "stdlib random is a process-global stream; "
+                          "use seeded generators")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "random":
+            self._add("RL102", node.lineno, "from random import ...",
+                      "use seeded generators")
+        self.generic_visit(node)
+
+    # ---------------------------------------------------------- RL104 ----
+    def _check_iter(self, it: ast.AST, line: int) -> None:
+        if _is_set_expr(it):
+            self._add("RL104", line,
+                      "iteration over an unordered set expression",
+                      "iterate sorted(...) so downstream order is "
+                      "deterministic")
+
+    def visit_For(self, node: ast.For) -> None:
+        self._check_iter(node.iter, node.lineno)
+        self.generic_visit(node)
+
+    def _comp(self, node) -> None:
+        for gen in node.generators:
+            self._check_iter(gen.iter, node.lineno)
+        self.generic_visit(node)
+
+    visit_ListComp = _comp
+    visit_GeneratorExp = _comp
+
+    def visit_SetComp(self, node: ast.SetComp) -> None:
+        # building another set keeps order irrelevant; don't descend
+        # into RL104 for its generators, but other rules still apply
+        self.generic_visit(node)
+
+    def visit_DictComp(self, node: ast.DictComp) -> None:
+        for gen in node.generators:
+            self._check_iter(gen.iter, node.lineno)
+        if _is_float_const(node.key):
+            self._add("RL105", node.lineno,
+                      "dict comprehension with float keys",
+                      "key on ints/strings (quantize or stringify)")
+        self.generic_visit(node)
+
+    # ---------------------------------------------------------- RL105 ----
+    def visit_Dict(self, node: ast.Dict) -> None:
+        for k in node.keys:
+            if k is not None and _is_float_const(k):
+                self._add("RL105", k.lineno,
+                          "dict literal with float key",
+                          "key on ints/strings (quantize or stringify)")
+                break
+        self.generic_visit(node)
+
+
+def _is_float_const(node: Optional[ast.AST]) -> bool:
+    return isinstance(node, ast.Constant) and isinstance(node.value, float)
+
+
+def analyze_determinism(path: Path, source: str) -> List[Finding]:
+    lint = _Lint(path)
+    lint.visit(ast.parse(source))
+    return lint.findings

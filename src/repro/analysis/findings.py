@@ -1,0 +1,196 @@
+"""Shared finding model for the determinism & hazard static-analysis
+suite (``python -m repro.analysis``).
+
+A :class:`Finding` is one rule violation at one source location; every
+analyzer in this package emits the same shape so the CLI can merge,
+suppress, baseline and render them uniformly. Severities:
+
+  * ``error``   — breaks the repo's determinism/parity contract
+                  (undeclared workspace write, wall-clock in serving,
+                  kernel contract violation, ...);
+  * ``warning`` — correct but wasteful or fragile (over-declared
+                  effects = lost parallelism).
+
+Suppression, in precedence order:
+
+  1. inline  — ``# repro-lint: disable=RL001`` (comma-separated ids,
+     or ``all``) on the finding's line;
+  2. file    — ``# repro-lint: disable-file=RL104`` anywhere in the
+     file suppresses that rule for the whole file;
+  3. baseline — a committed JSON file of accepted findings, matched on
+     ``(rule, path, message)`` so line drift does not resurrect them.
+
+Suppressed findings are kept (flagged) rather than dropped: reports
+show them, exit codes ignore them.
+"""
+from __future__ import annotations
+
+import io
+import json
+import tokenize
+from dataclasses import dataclass, field, replace
+from pathlib import Path
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
+
+SEVERITIES = ("error", "warning")
+
+#: rule id -> (severity, one-line summary); the authoritative catalog
+#: (DESIGN.md §Static analysis documents the rationale per rule).
+RULES: Dict[str, Tuple[str, str]] = {
+    # effects race detector (env/tools_impl.py handlers vs TOOL_EFFECTS)
+    "RL001": ("error", "undeclared workspace write (hazard race)"),
+    "RL002": ("error", "undeclared workspace read (unordered RAW)"),
+    "RL003": ("warning", "over-declared effect (lost parallelism)"),
+    "RL004": ("error", "registry/effects-table coverage gap"),
+    "RL005": ("error", "workspace attribute outside the hazard alphabet"),
+    # determinism lint (core/ serving/ env/ kernels/)
+    "RL101": ("error", "wall-clock read in deterministic code"),
+    "RL102": ("error", "stdlib random (unseeded global stream)"),
+    "RL103": ("error", "environment read in deterministic code"),
+    "RL104": ("error", "unordered set iteration feeding ordered output"),
+    "RL105": ("error", "float-keyed dict (hash/round-trip fragile)"),
+    # pallas kernel contract checker (kernels/*.py)
+    "RL201": ("error", "non-fp32 VMEM scratch accumulator"),
+    "RL202": ("error", "BlockSpec index_map arity != grid + prefetch"),
+    "RL203": ("error", "pallas_call operand/parameter count mismatch"),
+    "RL204": ("error", "dimension_semantics arity != grid arity"),
+    "RL205": ("error", "softmax/exp without fp32 cast in kernel"),
+    # backend registry checker (kernels/backend.py)
+    "RL301": ("error", "backend op signature violates OP_SURFACE"),
+    "RL302": ("error", "kernel module not wired into the registry"),
+    "RL303": ("error", "required backend/op registration missing"),
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str                    # repo-relative, "/"-separated
+    line: int
+    message: str
+    hint: str = ""
+    suppressed: str = ""         # "", "inline", "file" or "baseline"
+
+    @property
+    def severity(self) -> str:
+        return RULES[self.rule][0]
+
+    def to_json(self) -> Dict:
+        return {"rule": self.rule, "severity": self.severity,
+                "path": self.path, "line": self.line,
+                "message": self.message, "hint": self.hint,
+                "suppressed": self.suppressed}
+
+    def render(self) -> str:
+        tag = f" [suppressed:{self.suppressed}]" if self.suppressed else ""
+        hint = f"\n    hint: {self.hint}" if self.hint else ""
+        return (f"{self.path}:{self.line}: {self.rule} "
+                f"{self.severity}: {self.message}{tag}{hint}")
+
+
+def make_finding(rule: str, path, line: int, message: str,
+                 hint: str = "") -> Finding:
+    assert rule in RULES, rule
+    return Finding(rule, str(path).replace("\\", "/"), line, message, hint)
+
+
+# ------------------------------------------------------- suppressions ----
+
+_MARK = "repro-lint:"
+
+
+def _parse_directive(comment: str) -> Tuple[str, Set[str]]:
+    """Parse one ``# repro-lint: disable[-file]=RL001,RL002`` comment;
+    returns ("", set()) when the comment is not a directive."""
+    text = comment.lstrip("#").strip()
+    if not text.startswith(_MARK):
+        return "", set()
+    body = text[len(_MARK):].strip()
+    for kind in ("disable-file", "disable"):
+        if body.startswith(kind):
+            rest = body[len(kind):].lstrip("= ")
+            ids = {r.strip() for r in rest.split(",") if r.strip()}
+            return kind, ids
+    return "", set()
+
+
+@dataclass
+class Suppressions:
+    """Per-file suppression state parsed from comments."""
+    by_line: Dict[int, Set[str]] = field(default_factory=dict)
+    whole_file: Set[str] = field(default_factory=set)
+
+    @classmethod
+    def for_source(cls, source: str) -> "Suppressions":
+        sup = cls()
+        try:
+            toks = tokenize.generate_tokens(io.StringIO(source).readline)
+            for tok in toks:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                kind, ids = _parse_directive(tok.string)
+                if kind == "disable":
+                    sup.by_line.setdefault(tok.start[0], set()).update(ids)
+                elif kind == "disable-file":
+                    sup.whole_file.update(ids)
+        except tokenize.TokenizeError:
+            pass
+        return sup
+
+    def match(self, f: Finding) -> str:
+        inline = self.by_line.get(f.line, set())
+        if f.rule in inline or "all" in inline:
+            return "inline"
+        if f.rule in self.whole_file or "all" in self.whole_file:
+            return "file"
+        return ""
+
+
+def apply_suppressions(findings: Sequence[Finding],
+                       source_by_path: Dict[str, str]) -> List[Finding]:
+    """Mark findings suppressed by in-source directives."""
+    cache: Dict[str, Suppressions] = {}
+    out: List[Finding] = []
+    for f in findings:
+        if f.path not in cache and f.path in source_by_path:
+            cache[f.path] = Suppressions.for_source(source_by_path[f.path])
+        kind = cache[f.path].match(f) if f.path in cache else ""
+        out.append(replace(f, suppressed=kind) if kind else f)
+    return out
+
+
+# ----------------------------------------------------------- baseline ----
+
+def load_baseline(path: Path) -> Set[Tuple[str, str, str]]:
+    """Committed accepted findings as (rule, path, message) triples."""
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return {(e["rule"], e["path"], e["message"])
+            for e in data.get("accepted", [])}
+
+
+def write_baseline(path: Path, findings: Iterable[Finding]) -> None:
+    entries = [{"rule": f.rule, "path": f.path, "message": f.message}
+               for f in findings if not f.suppressed]
+    entries.sort(key=lambda e: (e["path"], e["rule"], e["message"]))
+    path.write_text(json.dumps({"accepted": entries}, indent=2) + "\n")
+
+
+def apply_baseline(findings: Sequence[Finding],
+                   baseline: Set[Tuple[str, str, str]]) -> List[Finding]:
+    out: List[Finding] = []
+    for f in findings:
+        if not f.suppressed and (f.rule, f.path, f.message) in baseline:
+            f = replace(f, suppressed="baseline")
+        out.append(f)
+    return out
+
+
+def active(findings: Iterable[Finding], severity: str = "error"
+           ) -> List[Finding]:
+    """Unsuppressed findings at or above ``severity``."""
+    keep = {"error": ("error",),
+            "warning": ("error", "warning")}[severity]
+    return [f for f in findings
+            if not f.suppressed and f.severity in keep]

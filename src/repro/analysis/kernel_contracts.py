@@ -1,0 +1,315 @@
+"""RL201–RL205: pallas kernel contract checker.
+
+The seven Pallas kernels follow conventions DESIGN.md §Kernel backends
+documents but nothing enforced: fp32 online-softmax accumulators in
+VMEM scratch, BlockSpec ``index_map`` lambdas taking exactly
+``len(grid) + num_scalar_prefetch`` parameters (scalar-prefetch refs
+are appended to every index_map's signature), operands passed to the
+compiled call in scalar-prefetch-first order, and
+``dimension_semantics`` tuples matching the grid arity. Violating any
+of these yields shape errors at best and silently wrong indexing at
+worst (an index_map with too few params drops a grid axis; a scalar
+operand out of order aliases the wrong ref).
+
+This checker parses every ``pl.pallas_call`` site:
+
+  * RL201 — ``pltpu.VMEM((...), dtype)`` scratch with dtype other than
+    ``jnp.float32`` (the online-softmax m/l/acc accumulators must not
+    round between blocks);
+  * RL202 — a BlockSpec ``index_map`` whose non-defaulted parameter
+    count differs from grid arity + num_scalar_prefetch (extra
+    defaulted params like ``G=G`` closures are fine);
+  * RL203 — operand/parameter count mismatches: the immediate call of
+    the ``pallas_call`` result must pass ``num_scalar_prefetch +
+    len(in_specs)`` operands, and the kernel function must take
+    ``prefetch + inputs + outputs + scratch`` positional refs;
+  * RL204 — ``dimension_semantics`` length != grid arity;
+  * RL205 — a kernel body computing ``exp``/softmax with no
+    ``.astype(jnp.float32)`` cast in scope (scores must be promoted
+    before exponentiation).
+
+Static only; conservative: sites whose grid/specs are not literal
+enough to analyze are skipped, never guessed.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding, make_finding
+
+
+def _dotted(node: ast.AST) -> str:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+@dataclass
+class SiteSpec:
+    call: ast.Call                       # the pl.pallas_call(...) node
+    line: int
+    grid_arity: Optional[int]
+    n_prefetch: int
+    in_specs: List[ast.AST]
+    out_specs: List[ast.AST]
+    n_out: Optional[int]
+    scratch: List[ast.AST]
+    dim_semantics: Optional[int]
+    kernel_arg: Optional[ast.AST]        # first positional arg
+
+
+def _tuple_len(node: Optional[ast.AST]) -> Optional[int]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    return None
+
+
+def _list_elts(node: Optional[ast.AST]) -> List[ast.AST]:
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    if node is None:
+        return []
+    return [node]
+
+
+def _local_value(node: Optional[ast.AST],
+                 enclosing: Optional[ast.FunctionDef]) -> Optional[ast.AST]:
+    """Follow ``x = <expr>`` one level when ``node`` is a local Name —
+    the kernels bind grid_spec/kernel to locals before pallas_call."""
+    if not (isinstance(node, ast.Name) and enclosing is not None):
+        return node
+    for stmt in ast.walk(enclosing):
+        if isinstance(stmt, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == node.id
+                for t in stmt.targets):
+            return stmt.value
+    return node
+
+
+def _parse_site(call: ast.Call,
+                enclosing: Optional[ast.FunctionDef]) -> SiteSpec:
+    grid_arity: Optional[int] = None
+    n_prefetch = 0
+    in_specs: List[ast.AST] = []
+    out_specs: List[ast.AST] = []
+    scratch: List[ast.AST] = []
+
+    def arg(c: ast.Call, name: str) -> Optional[ast.AST]:
+        return _local_value(_kwarg(c, name), enclosing)
+
+    grid_spec = arg(call, "grid_spec")
+    if isinstance(grid_spec, ast.Call) and \
+            _dotted(grid_spec.func).endswith("PrefetchScalarGridSpec"):
+        gs = grid_spec
+        npf = arg(gs, "num_scalar_prefetch")
+        if isinstance(npf, ast.Constant) and isinstance(npf.value, int):
+            n_prefetch = npf.value
+        grid_arity = _tuple_len(arg(gs, "grid"))
+        in_specs = _list_elts(arg(gs, "in_specs"))
+        out_specs = _list_elts(arg(gs, "out_specs"))
+        scratch = _list_elts(arg(gs, "scratch_shapes"))
+    else:
+        grid_arity = _tuple_len(arg(call, "grid"))
+        in_specs = _list_elts(arg(call, "in_specs"))
+        out_specs = _list_elts(arg(call, "out_specs"))
+        scratch = _list_elts(arg(call, "scratch_shapes"))
+
+    out_shape = arg(call, "out_shape")
+    n_out = _tuple_len(out_shape)
+    if n_out is None and out_shape is not None:
+        n_out = 1
+    if n_out is None and out_specs:
+        n_out = len(out_specs)
+
+    dim_sem: Optional[int] = None
+    cp = arg(call, "compiler_params")
+    if isinstance(cp, ast.Call):
+        dim_sem = _tuple_len(arg(cp, "dimension_semantics"))
+
+    kernel_arg = call.args[0] if call.args else None
+    return SiteSpec(call, call.lineno, grid_arity, n_prefetch, in_specs,
+                    out_specs, n_out, scratch, dim_sem, kernel_arg)
+
+
+def _resolve_kernel_fn(site: SiteSpec, module: ast.Module,
+                       enclosing: Optional[ast.FunctionDef]
+                       ) -> Tuple[Optional[ast.FunctionDef], int]:
+    """The kernel FunctionDef the site dispatches to, plus the number
+    of positional args pre-bound by ``functools.partial``."""
+    target = site.kernel_arg
+    bound = 0
+    if isinstance(target, ast.Name) and enclosing is not None:
+        wanted = target.id
+        for stmt in ast.walk(enclosing):
+            if isinstance(stmt, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == wanted
+                    for t in stmt.targets):
+                target = stmt.value
+                break
+    if isinstance(target, ast.Call) and \
+            _dotted(target.func).endswith("partial") and target.args:
+        bound = len(target.args) - 1
+        target = target.args[0]
+    if isinstance(target, ast.Name):
+        for node in module.body:
+            if isinstance(node, ast.FunctionDef) \
+                    and node.name == target.id:
+                return node, bound
+    return None, bound
+
+
+def _lambda_arity(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Lambda):
+        a = node.args
+        return len(a.args) - len(a.defaults)
+    return None
+
+
+def _index_map(spec: ast.AST) -> Optional[ast.AST]:
+    """The index_map argument of a BlockSpec(...) call, if literal."""
+    if not (isinstance(spec, ast.Call)
+            and _dotted(spec.func).endswith("BlockSpec")):
+        return None
+    im = _kwarg(spec, "index_map")
+    if im is not None:
+        return im
+    if len(spec.args) >= 2:
+        return spec.args[1]
+    return None
+
+
+def analyze_kernels(path: Path, source: str) -> List[Finding]:
+    findings: List[Finding] = []
+    module = ast.parse(source)
+
+    # map every pallas_call site to its enclosing function + the call
+    # applying its result (for operand counting)
+    enclosing_of: Dict[ast.Call, Optional[ast.FunctionDef]] = {}
+    applied_args: Dict[ast.Call, int] = {}
+
+    def walk(node: ast.AST, fn: Optional[ast.FunctionDef]) -> None:
+        for child in ast.iter_child_nodes(node):
+            nfn = child if isinstance(child, ast.FunctionDef) else fn
+            if isinstance(child, ast.Call):
+                if _dotted(child.func).endswith("pallas_call"):
+                    enclosing_of[child] = nfn
+                if isinstance(child.func, ast.Call) and \
+                        _dotted(child.func.func).endswith("pallas_call"):
+                    applied_args[child.func] = len(child.args)
+            walk(child, nfn)
+
+    walk(module, None)
+
+    for call, fn in enclosing_of.items():
+        site = _parse_site(call, fn)
+        expected_im = (None if site.grid_arity is None
+                       else site.grid_arity + site.n_prefetch)
+
+        # RL202: index_map arities
+        for spec in site.in_specs + site.out_specs:
+            im = _index_map(spec)
+            arity = _lambda_arity(im) if im is not None else None
+            if expected_im is not None and arity is not None \
+                    and arity != expected_im:
+                findings.append(make_finding(
+                    "RL202", path, im.lineno,
+                    f"index_map takes {arity} params; grid arity "
+                    f"{site.grid_arity} + {site.n_prefetch} scalar-"
+                    f"prefetch refs requires {expected_im}",
+                    "scalar-prefetch refs are appended to every "
+                    "index_map signature"))
+
+        # RL201: scratch dtypes
+        for s in site.scratch:
+            if isinstance(s, ast.Call) and \
+                    _dotted(s.func).endswith("VMEM") and len(s.args) >= 2:
+                dt = _dotted(s.args[1])
+                if dt and not dt.endswith("float32"):
+                    findings.append(make_finding(
+                        "RL201", path, s.lineno,
+                        f"VMEM scratch declared {dt}; online-softmax "
+                        f"accumulators must be fp32",
+                        "use jnp.float32 scratch and cast on the "
+                        "final store"))
+
+        # RL204: dimension_semantics arity
+        if site.dim_semantics is not None and site.grid_arity is not None \
+                and site.dim_semantics != site.grid_arity:
+            findings.append(make_finding(
+                "RL204", path, site.line,
+                f"dimension_semantics has {site.dim_semantics} entries "
+                f"for a {site.grid_arity}-axis grid",
+                "one semantics entry per grid axis"))
+
+        # RL203: operand count at the application site
+        n_ops = applied_args.get(call)
+        if n_ops is not None and site.in_specs:
+            expected_ops = site.n_prefetch + len(site.in_specs)
+            if n_ops != expected_ops:
+                findings.append(make_finding(
+                    "RL203", path, site.line,
+                    f"compiled call receives {n_ops} operands; "
+                    f"{site.n_prefetch} scalar-prefetch + "
+                    f"{len(site.in_specs)} in_specs requires "
+                    f"{expected_ops}",
+                    "pass scalar-prefetch operands first, then one "
+                    "array per in_spec"))
+
+        # RL203 + RL205: kernel function checks
+        kfn, bound = _resolve_kernel_fn(site, module, fn)
+        if kfn is not None and site.in_specs and site.n_out is not None:
+            n_pos = len(kfn.args.args) - bound
+            expected_refs = (site.n_prefetch + len(site.in_specs)
+                             + site.n_out + len(site.scratch))
+            if n_pos != expected_refs:
+                findings.append(make_finding(
+                    "RL203", path, kfn.lineno,
+                    f"kernel {kfn.name!r} takes {n_pos} refs; "
+                    f"{site.n_prefetch} prefetch + "
+                    f"{len(site.in_specs)} inputs + {site.n_out} "
+                    f"outputs + {len(site.scratch)} scratch requires "
+                    f"{expected_refs}",
+                    "ref order: scalar-prefetch, inputs, outputs, "
+                    "scratch"))
+        if kfn is not None:
+            findings.extend(_check_fp32_softmax(path, kfn))
+
+    return findings
+
+
+def _check_fp32_softmax(path: Path, kfn: ast.FunctionDef
+                        ) -> List[Finding]:
+    uses_exp_line = None
+    has_cast = False
+    for node in ast.walk(kfn):
+        if isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            if d.endswith(".exp") or d.endswith(".softmax"):
+                if uses_exp_line is None:
+                    uses_exp_line = node.lineno
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "astype" and node.args \
+                    and _dotted(node.args[0]).endswith("float32"):
+                has_cast = True
+    if uses_exp_line is not None and not has_cast:
+        return [make_finding(
+            "RL205", path, uses_exp_line,
+            f"kernel {kfn.name!r} exponentiates without any "
+            f".astype(jnp.float32) promotion",
+            "cast scores to fp32 before exp; accumulate in fp32")]
+    return []

@@ -1,0 +1,124 @@
+"""Orchestration: which analyzer runs where, suppression/baseline
+application, and report assembly for the CLI.
+
+Scopes (relative to the repo root, auto-detected from this package's
+location unless overridden):
+
+  * effects race detector  — ``src/repro/env/tools_impl.py`` (diffed
+    against the live tool registry);
+  * determinism lint       — ``src/repro/{core,serving,env,kernels}``
+    (``benchmarks/``, ``launch/``, ``training/`` and tests may read
+    wall-clock legitimately and are out of scope);
+  * kernel contracts       — ``src/repro/kernels/*.py`` except
+    ``ref.py``/``backend.py`` (jnp oracles are not Pallas kernels);
+  * backend registry       — ``src/repro/kernels/`` as a unit.
+
+``run_repo`` is the one entry the CLI and tests share; ``run_paths``
+analyzes an explicit file/dir list (fixture corpora) with the same
+rule engine but no repo-wide registry coupling.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.analysis import findings as F
+from repro.analysis.backend_check import analyze_backend_registry
+from repro.analysis.determinism import analyze_determinism
+from repro.analysis.effects_check import analyze_effects
+from repro.analysis.kernel_contracts import analyze_kernels
+
+DETERMINISM_DIRS = ("core", "serving", "env", "kernels")
+BASELINE_NAME = "analysis_baseline.json"
+
+
+def repo_root() -> Path:
+    """…/src/repro/analysis/runner.py -> the repo checkout root."""
+    return Path(__file__).resolve().parents[3]
+
+
+def _rel(path: Path, root: Path) -> str:
+    try:
+        return path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def _is_kernel_impl(path: Path, source: str) -> bool:
+    return (path.stem not in ("__init__", "ref", "backend")
+            and "pallas_call" in source)
+
+
+def analyze_file(path: Path, root: Path,
+                 registry_names: Optional[Sequence[str]] = None
+                 ) -> List[F.Finding]:
+    """Every applicable single-file analyzer over one source file."""
+    source = path.read_text()
+    rel = _rel(path, root)
+    out: List[F.Finding] = []
+    out.extend(analyze_determinism(Path(rel), source))
+    has_effects_table = any(ln.startswith("TOOL_EFFECTS")
+                            for ln in source.splitlines())
+    if path.name == "tools_impl.py" or has_effects_table:
+        out.extend(analyze_effects(Path(rel), source,
+                                   registry_names=registry_names))
+    if _is_kernel_impl(path, source):
+        out.extend(analyze_kernels(Path(rel), source))
+    return out
+
+
+def _suppress(findings: List[F.Finding], root: Path) -> List[F.Finding]:
+    sources: Dict[str, str] = {}
+    for f in findings:
+        p = root / f.path
+        if f.path not in sources and p.exists():
+            sources[f.path] = p.read_text()
+    return F.apply_suppressions(findings, sources)
+
+
+def run_paths(paths: Iterable[Path], root: Optional[Path] = None,
+              baseline: Optional[Path] = None) -> List[F.Finding]:
+    """Analyze an explicit list of files/dirs (no registry coupling)."""
+    root = root or repo_root()
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    findings: List[F.Finding] = []
+    for f in files:
+        findings.extend(analyze_file(f, root))
+    findings = _suppress(findings, root)
+    if baseline is not None:
+        findings = F.apply_baseline(findings, F.load_baseline(baseline))
+    findings.sort(key=lambda x: (x.path, x.line, x.rule))
+    return findings
+
+
+def run_repo(root: Optional[Path] = None,
+             baseline: Optional[Path] = None) -> List[F.Finding]:
+    """The full four-analyzer sweep the CI gate runs."""
+    root = root or repo_root()
+    pkg = root / "src" / "repro"
+    findings: List[F.Finding] = []
+
+    try:
+        from repro.core.tools import DEFAULT_REGISTRY
+        registry_names: Optional[List[str]] = DEFAULT_REGISTRY.names()
+    except Exception:
+        registry_names = None
+
+    for d in DETERMINISM_DIRS:
+        for f in sorted((pkg / d).rglob("*.py")):
+            findings.extend(analyze_file(f, root,
+                                         registry_names=registry_names))
+
+    kfinds = analyze_backend_registry(pkg / "kernels")
+    for f in kfinds:
+        findings.append(F.Finding(f.rule, _rel(Path(f.path), root),
+                                  f.line, f.message, f.hint))
+
+    findings = _suppress(findings, root)
+    bl = baseline if baseline is not None else root / BASELINE_NAME
+    findings = F.apply_baseline(findings, F.load_baseline(bl))
+    findings.sort(key=lambda x: (x.path, x.line, x.rule))
+    return findings

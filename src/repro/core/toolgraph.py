@@ -64,6 +64,19 @@ class DuplicateNodeError(ToolGraphError):
 
 # ------------------------------------------------------------- data model --
 
+#: The hazard alphabet: every named workspace resource dependency
+#: inference may order on. ``env/tools_impl.WORKSPACE_RESOURCE_ATTRS``
+#: maps each name to the concrete ``Workspace`` attribute it denotes;
+#: the static analyzer (``repro.analysis``) and the import-time
+#: ``core.tools.validate_effects`` check both directions against this
+#: set, so an effects entry can never silently name a resource the
+#: hazard analysis does not know.
+WORKSPACE_RESOURCES: FrozenSet[str] = frozenset({
+    "handles", "map", "detections", "landcover", "artifacts",
+    "answer", "ui", "rng",
+})
+
+
 @dataclass(frozen=True)
 class ToolEffects:
     """Workspace resources a tool reads/writes — the hazard alphabet.
@@ -77,6 +90,15 @@ class ToolEffects:
     """
     reads: FrozenSet[str] = frozenset()
     writes: FrozenSet[str] = frozenset()
+
+    def resources(self) -> FrozenSet[str]:
+        return self.reads | self.writes
+
+    def unknown_resources(self, alphabet: FrozenSet[str] = WORKSPACE_RESOURCES
+                          ) -> FrozenSet[str]:
+        """Resource names this entry uses that ``alphabet`` lacks —
+        non-empty means hazard inference would silently ignore them."""
+        return self.resources() - alphabet
 
 
 @dataclass(frozen=True)

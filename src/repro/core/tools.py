@@ -11,7 +11,17 @@ from __future__ import annotations
 
 import json
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.toolgraph import ToolEffects, WORKSPACE_RESOURCES
+
+
+class EffectsCoverageError(Exception):
+    """The registry and an effects table disagree — a tool without an
+    effects entry (hazard inference would reject it at compile time) or
+    an effects entry for no registered tool (dead declaration that can
+    mask a rename), or an entry naming resources outside the hazard
+    alphabet (dependencies silently not inferred)."""
 
 
 @dataclass(frozen=True)
@@ -81,12 +91,40 @@ class ToolRegistry:
         return graph.validate(known_tools=self.names())
 
 
+def validate_effects(registry: "ToolRegistry",
+                     effects: Mapping[str, ToolEffects],
+                     alphabet=WORKSPACE_RESOURCES) -> None:
+    """Fail-fast cross-check of a registry against its effects table
+    (the runtime mirror of the static analyzer's RL004/RL005 rules;
+    ``env/tools_impl.py`` runs it at import time so a drifted table
+    breaks immediately, not just under lint).
+
+    Raises :class:`EffectsCoverageError` when coverage is not exactly
+    1:1 or an entry names a resource outside the hazard alphabet.
+    """
+    problems: List[str] = []
+    missing = sorted(set(registry.tools) - set(effects))
+    extra = sorted(set(effects) - set(registry.tools))
+    if missing:
+        problems.append(f"registry tools without effects entry: {missing}")
+    if extra:
+        problems.append(f"effects entries for unregistered tools: {extra}")
+    for name in sorted(effects):
+        unknown = sorted(effects[name].unknown_resources(alphabet))
+        if unknown:
+            problems.append(
+                f"{name}: effects name unknown resources {unknown} "
+                f"(alphabet: {sorted(alphabet)})")
+    if problems:
+        raise EffectsCoverageError("; ".join(problems))
+
+
 def _t(name, lib, desc, params, returns="object"):
     return Tool(name, lib, desc, tuple(params), returns)
 
 
 def build_default_registry() -> ToolRegistry:
-    """The platform's full catalog: 11 libraries, 58 tools."""
+    """The platform's full catalog: 12 libraries, 48 tools."""
     r = ToolRegistry()
     P = lambda *ps: list(ps)
 

@@ -27,7 +27,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.toolgraph import ToolEffects
+from repro.core.toolgraph import ToolEffects, WORKSPACE_RESOURCES
+from repro.core.tools import DEFAULT_REGISTRY, validate_effects
 from repro.env.world import LANDCOVER_CLASSES, World
 
 
@@ -312,6 +313,30 @@ def execute_tool(ws: Workspace, name: str, args: Dict[str, Any]) -> str:
 #   ui          ws.ui_state              (browser/UI session state)
 #   rng         ws.rng                   (seeded noise-model stream)
 
+#: Resource name -> the ``Workspace`` attribute it denotes. This is the
+#: structured form of the table above, consumed by the static effects
+#: race detector (``repro.analysis.effects_check``): any handler access
+#: to one of these attributes must be covered by the tool's declared
+#: ``ToolEffects`` entry.
+WORKSPACE_RESOURCE_ATTRS: Dict[str, str] = {
+    "handles": "handles",
+    "map": "map_layers",
+    "detections": "detections",
+    "landcover": "landcover",
+    "artifacts": "artifacts",
+    "answer": "last_answer",
+    "ui": "ui_state",
+    "rng": "rng",
+}
+
+#: Workspace attributes that are read-only configuration at tool-
+#: execution time (no tool may write them), hence outside the hazard
+#: alphabet: reads of these can never order two tools.
+READONLY_WORKSPACE_ATTRS = frozenset({"world", "temperature"})
+
+assert frozenset(WORKSPACE_RESOURCE_ATTRS) == WORKSPACE_RESOURCES
+
+
 def _eff(reads: str = "", writes: str = "") -> ToolEffects:
     return ToolEffects(frozenset(reads.split()), frozenset(writes.split()))
 
@@ -377,6 +402,12 @@ TOOL_EFFECTS: Dict[str, ToolEffects] = {
     "run_python":         _eff(writes="artifacts"),
     "tabulate":           _eff(writes="artifacts"),
 }
+
+
+# Fail fast at import if the effects table drifts from the catalog:
+# exact 1:1 registry<->effects coverage, alphabet-only resource names
+# (the runtime mirror of repro.analysis RL004/RL005).
+validate_effects(DEFAULT_REGISTRY, TOOL_EFFECTS)
 
 
 def tool_effects(name: str) -> ToolEffects:

@@ -26,8 +26,9 @@ partitioning — Pallas kernels are chip-local).
 from __future__ import annotations
 
 import contextlib
+import inspect
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Union
+from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
 
@@ -69,11 +70,101 @@ class KernelBackend:
     mlstm_scan: Callable
 
 
+#: The declared call surface of every op, as ``op -> (positional arg
+#: names, keyword-only arg names)``. This is the machine-readable form
+#: of the signature block in :class:`KernelBackend`'s docstring: model
+#: call sites may pass exactly these arguments to any backend, so every
+#: registered implementation must *accept* the full surface (extra
+#: parameters are fine only when they carry defaults — e.g. the
+#: reference ``attention``'s ``kv_len``). ``register_backend`` enforces
+#: this at import time; ``repro.analysis.backend_check`` re-checks it
+#: (plus registry completeness) under lint as RL301–RL303.
+OP_SURFACE: Dict[str, Tuple[Tuple[str, ...], Tuple[str, ...]]] = {
+    "attention": (("q", "k", "v"),
+                  ("causal", "window", "cap", "scale", "q_offset")),
+    "decode_attention": (("q", "k_cache", "v_cache", "kv_len"),
+                         ("cap", "scale")),
+    "paged_decode_attention": (
+        ("q", "k_pages", "v_pages", "block_tab", "kv_len"),
+        ("cap", "scale")),
+    "verify_attention": (("q", "k_cache", "v_cache", "kv_len"),
+                         ("cap", "scale")),
+    "paged_verify_attention": (
+        ("q", "k_pages", "v_pages", "block_tab", "kv_len"),
+        ("cap", "scale")),
+    "router_topk": (("logits", "k"), ()),
+    "selective_scan": (("dt", "x", "B_", "C_", "A", "h0"), ()),
+    "mlstm_scan": (("q", "k", "v", "i_pre", "f_pre", "state"), ("scale",)),
+}
+
+OPS: Tuple[str, ...] = tuple(OP_SURFACE)
+
+
+class BackendContractError(TypeError):
+    """A registered implementation cannot serve the declared op surface
+    (missing/renamed parameters, or extras without defaults)."""
+
+
+def check_op_signature(op: str, impl: Callable) -> Optional[str]:
+    """Return a defect description if ``impl`` cannot accept the
+    declared :data:`OP_SURFACE` call for ``op``, else None.
+
+    Rules: the leading positional parameter names must match the
+    surface exactly (callers pass them positionally); every declared
+    keyword-only name must be accepted; any parameter beyond the
+    surface must have a default (so surface-shaped calls still bind).
+    """
+    pos_names, kw_names = OP_SURFACE[op]
+    try:
+        params = list(inspect.signature(impl).parameters.values())
+    except (TypeError, ValueError):          # builtins / C callables
+        return None
+    pos = [p for p in params if p.kind in (p.POSITIONAL_ONLY,
+                                           p.POSITIONAL_OR_KEYWORD)]
+    kws = {p.name: p for p in params if p.kind == p.KEYWORD_ONLY}
+    has_var_kw = any(p.kind == p.VAR_KEYWORD for p in params)
+    got = tuple(p.name for p in pos[:len(pos_names)])
+    if got != pos_names:
+        return (f"positional params {got} != declared {pos_names}")
+    for extra in pos[len(pos_names):]:
+        if extra.default is extra.empty:
+            return (f"extra positional param {extra.name!r} without a "
+                    f"default breaks surface-shaped calls")
+    if not has_var_kw:
+        missing = [n for n in kw_names if n not in kws]
+        if missing:
+            return f"missing keyword params {missing}"
+    for name, p in kws.items():
+        if name not in kw_names and p.default is p.empty:
+            return (f"extra keyword-only param {name!r} without a "
+                    f"default breaks surface-shaped calls")
+    return None
+
+
+def validate_backend(backend: KernelBackend) -> Dict[str, str]:
+    """All op-surface defects of one backend, ``op -> description``."""
+    defects: Dict[str, str] = {}
+    for op in OPS:
+        impl = getattr(backend, op, None)
+        if not callable(impl):
+            defects[op] = "op not implemented (field missing/not callable)"
+            continue
+        bad = check_op_signature(op, impl)
+        if bad:
+            defects[op] = bad
+    return defects
+
+
 _REGISTRY: Dict[str, KernelBackend] = {}
 _SCOPED: Optional[str] = None
 
 
 def register_backend(backend: KernelBackend) -> KernelBackend:
+    defects = validate_backend(backend)
+    if defects:
+        raise BackendContractError(
+            f"backend {backend.name!r} violates the op surface: "
+            + "; ".join(f"{op}: {d}" for op, d in sorted(defects.items())))
     _REGISTRY[backend.name] = backend
     return backend
 

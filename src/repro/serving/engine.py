@@ -53,7 +53,6 @@ DESIGN.md §Kernel backends has the selection rules and parity contract.
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Tuple
@@ -209,10 +208,17 @@ class InferenceEngine:
                  backend: Optional[str] = None, kv_mode: str = "dense",
                  kv_blocks: Optional[int] = None,
                  block_size: Optional[int] = None,
-                 spec_decode: Optional[SpecConfig] = None):
+                 spec_decode: Optional[SpecConfig] = None,
+                 clock: Optional[Callable[[], float]] = None):
         from repro.kernels.backend import get_backend
         self.cfg = cfg
         self.params = params
+        # Request latency timestamps (enqueue/first-token/finish) come
+        # from an *injected* clock; the engine itself never reads the
+        # wall clock, so runs are reproducible by construction. The
+        # live-serve launcher passes time.time; ticks/tests keep the
+        # zero clock (timestamps all 0.0, TTFT math is tick-based).
+        self._clock: Callable[[], float] = clock or (lambda: 0.0)
         self.max_batch = max_batch
         self.cache_len = cache_len
         # resolve once so every jitted step traces one fixed backend
@@ -320,7 +326,7 @@ class InferenceEngine:
                else list(prompt_text_or_ids))
         req = Request(self._next_id, ids, max_new_tokens, sampler,
                       prefix_key=prefix_key, session_id=session_id,
-                      enqueue_t=time.time())
+                      enqueue_t=self._clock())
         self._next_id += 1
         self.queue.append(req)
         return req.request_id
@@ -560,7 +566,7 @@ class InferenceEngine:
     def _finish_now(self, req: Request, reason: str):
         req.done = True
         req.finish_reason = reason
-        req.finish_t = time.time()
+        req.finish_t = self._clock()
         if not req.first_token_t:
             # finished without ever sampling (paged cache_len/kv_oom
             # refusals): leave no 0.0 sentinel for TTFT math downstream
@@ -684,7 +690,7 @@ class InferenceEngine:
         tok = int(sample(logits, self._request_key(req, k),
                          req.sampler)[0])
         req.output.append(tok)
-        req.first_token_t = time.time()
+        req.first_token_t = self._clock()
         if tok == SPECIALS["<eos>"] or \
                 len(req.output) >= req.max_new_tokens:
             self._finish_now(req, "eos" if tok == SPECIALS["<eos>"]

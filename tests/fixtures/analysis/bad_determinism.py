@@ -1,0 +1,43 @@
+"""Seeded-bad fixture for the determinism lint (RL101-RL105).
+
+Each `# expect: RL###` marker pins the exact line the analyzer must
+report. Never imported at runtime — parsed only.
+"""
+import os
+import random                                      # expect: RL102
+import time
+from datetime import datetime
+
+
+def stamp():
+    return time.time()                             # expect: RL101
+
+
+def when():
+    return datetime.now()                          # expect: RL101
+
+
+def env_mode():
+    return os.environ["MODE"]                      # expect: RL103
+
+
+def env_get():
+    return os.getenv("MODE", "fast")               # expect: RL103
+
+
+def draw():
+    return random.random()                         # expect: RL102
+
+
+def ordered(items):
+    out = []
+    for x in {i for i in items}:                   # expect: RL104
+        out.append(x)
+    return out
+
+
+def listed():
+    return list({3, 1, 2})                         # expect: RL104
+
+
+BAD_TABLE = {0.5: "half", 1.5: "sesqui"}           # expect: RL105

@@ -1,0 +1,42 @@
+"""Seeded-bad fixture for the effects race detector (RL001-RL005).
+
+Each `# expect: RL###` marker pins the exact line the analyzer must
+report. Never imported at runtime — parsed only.
+"""
+WORKSPACE_RESOURCE_ATTRS = {
+    "handles": "handles",
+    "artifacts": "artifacts",
+    "answer": "last_answer",
+    "rng": "rng",
+}
+READONLY_WORKSPACE_ATTRS = frozenset({"world"})
+
+
+def _eff(reads="", writes=""):
+    return (frozenset(reads.split()), frozenset(writes.split()))
+
+
+def execute_tool(ws, name, args):
+    if name == "racy_write":
+        ws.artifacts.append({"op": name})          # expect: RL001
+        return "ok"
+    if name == "sneaky_read":
+        return list(ws.handles)                    # expect: RL002
+    if name == "rogue_attr":
+        ws.scratchpad = 1                          # expect: RL005
+        return "ok"
+    if name == "over_declared":
+        ws.artifacts.append({"op": name})
+        return "ok"
+    if name == "no_entry":                         # expect: RL004
+        return "ok"
+    return "?"
+
+
+TOOL_EFFECTS = {
+    "racy_write": _eff(),
+    "sneaky_read": _eff(),
+    "rogue_attr": _eff(),
+    "over_declared": _eff(writes="answer artifacts"),   # expect: RL003
+    "lazy_declare": _eff(writes="answer"),              # expect: RL004
+}

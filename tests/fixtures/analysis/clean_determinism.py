@@ -1,0 +1,28 @@
+"""Known-clean fixture for the determinism lint: seeded generators,
+sorted-set iteration, os.path (not os.environ), non-float dict keys.
+The analyzer must report nothing here. Never imported at runtime —
+parsed only.
+"""
+import os.path
+
+import numpy as np
+
+
+def ordered(items):
+    return [x for x in sorted({i for i in items})]
+
+
+def seeded(seed):
+    rng = np.random.default_rng(seed)
+    return float(rng.random())
+
+
+def join(base, name):
+    return os.path.join(base, name)
+
+
+def tick_latency(enqueue_tick, finish_tick):
+    return finish_tick - enqueue_tick
+
+
+TABLE = {1: "one", "two": 2}

@@ -1,0 +1,43 @@
+"""Known-clean fixture for the effects race detector: helpers,
+write-subsumes-read, rng-as-write, readonly attrs. The analyzer must
+report nothing here. Never imported at runtime — parsed only.
+"""
+WORKSPACE_RESOURCE_ATTRS = {
+    "handles": "handles",
+    "artifacts": "artifacts",
+    "answer": "last_answer",
+    "rng": "rng",
+}
+READONLY_WORKSPACE_ATTRS = frozenset({"world", "temperature"})
+
+
+def _eff(reads="", writes=""):
+    return (frozenset(reads.split()), frozenset(writes.split()))
+
+
+def _pick(ws, ids):
+    return [i for i in ids if i in ws.world.images]
+
+
+def execute_tool(ws, name, args):
+    if name == "loader":
+        ids = _pick(ws, args.get("ids", []))
+        ws.handles.extend(i for i in ids if i not in ws.handles)
+        return "ok"
+    if name == "sampler":
+        n = int(ws.rng.integers(1, 4))
+        ws.last_answer = str(n)
+        return "ok"
+    if name == "export":
+        if not ws.handles:
+            return "empty"
+        ws.artifacts.append({"inputs": list(ws.handles)})
+        return "ok"
+    return "?"
+
+
+TOOL_EFFECTS = {
+    "loader": _eff(writes="handles"),
+    "sampler": _eff(writes="answer rng"),
+    "export": _eff(reads="handles", writes="artifacts"),
+}

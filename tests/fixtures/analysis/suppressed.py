@@ -1,0 +1,14 @@
+"""Suppression-semantics fixture: one inline disable, one file-wide
+disable, and one violation left active. Never imported at runtime —
+parsed only.
+"""
+# repro-lint: disable-file=RL104
+import random  # repro-lint: disable=RL102
+
+
+def pick(items):
+    return list({i for i in items})
+
+
+def draw():
+    return random.choice([1, 2])

@@ -1,0 +1,265 @@
+"""Static-analysis suite tests (src/repro/analysis).
+
+Three layers:
+
+  * fixture corpus — every rule id RL001-RL205 is seeded exactly once
+    per `# expect: RL###` marker in tests/fixtures/analysis/bad_*.py
+    and must be caught at *that* line; clean_*.py must stay silent
+    (false-positive guard);
+  * semantics — suppression precedence (inline > file > baseline),
+    baseline round-trips, CLI exit codes / --json / --format github;
+  * repo gate — the full `run_repo` sweep reports zero unsuppressed
+    findings (the CI invariant), and the runtime mirrors
+    (core.tools.validate_effects, kernels.backend.OP_SURFACE checks)
+    reject the same drift the analyzers lint for.
+"""
+import dataclasses
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import findings as F
+from repro.analysis.backend_check import analyze_backend_registry
+from repro.analysis.cli import main as cli_main
+from repro.analysis.runner import repo_root, run_paths, run_repo
+from repro.core.toolgraph import ToolEffects
+from repro.core.tools import (EffectsCoverageError, Tool, ToolRegistry,
+                              validate_effects)
+from repro.kernels import backend as KB
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+BAD = ["bad_effects.py", "bad_determinism.py", "bad_kernel.py"]
+CLEAN = ["clean_effects.py", "clean_determinism.py", "clean_kernel.py"]
+
+_MARKER = re.compile(r"#\s*expect:\s*(RL\d{3}(?:\s*,\s*RL\d{3})*)")
+
+
+def expected_markers(path: Path):
+    """(line, rule) pairs pinned by `# expect: RL###[, RL###]`."""
+    out = set()
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        m = _MARKER.search(line)
+        if m:
+            for rule in m.group(1).split(","):
+                out.add((i, rule.strip()))
+    return out
+
+
+def found_pairs(findings):
+    return {(f.line, f.rule) for f in findings}
+
+
+# ------------------------------------------------------ fixture corpus ----
+
+@pytest.mark.parametrize("name", BAD)
+def test_bad_fixture_caught_at_exact_lines(name):
+    path = FIXTURES / name
+    expected = expected_markers(path)
+    assert expected, f"{name} has no expect markers"
+    findings = run_paths([path])
+    assert found_pairs(findings) == expected
+    assert not any(f.suppressed for f in findings)
+
+
+def test_corpus_covers_every_file_rule():
+    seeded = set()
+    for name in BAD:
+        seeded |= {rule for _, rule in expected_markers(FIXTURES / name)}
+    file_rules = {r for r in F.RULES if not r.startswith("RL3")}
+    assert seeded == file_rules
+
+
+@pytest.mark.parametrize("name", CLEAN)
+def test_clean_fixture_has_no_false_positives(name):
+    assert run_paths([FIXTURES / name]) == []
+
+
+def test_findings_carry_hints_and_severity():
+    findings = run_paths([FIXTURES / "bad_effects.py"])
+    assert findings and all(f.hint for f in findings)
+    assert {f.severity for f in findings} <= {"error", "warning"}
+    # RL003 (over-declaration) is the one warning-severity rule: it
+    # must not gate --fail-on error but must gate --fail-on warning
+    rules_at_error = {f.rule for f in F.active(findings, "error")}
+    rules_at_warn = {f.rule for f in F.active(findings, "warning")}
+    assert "RL003" not in rules_at_error
+    assert "RL003" in rules_at_warn
+
+
+# -------------------------------------------------- suppression layers ----
+
+def _suppressed_fixture_findings():
+    return run_paths([FIXTURES / "suppressed.py"])
+
+
+def test_inline_and_file_suppression():
+    findings = _suppressed_fixture_findings()
+    by_msg = {f.message: f for f in findings}
+    assert by_msg["import random"].suppressed == "inline"
+    assert by_msg["list() over an unordered set expression"] \
+        .suppressed == "file"
+    active = F.active(findings)
+    assert [f.message for f in active] == \
+        ["stdlib random call random.choice()"]
+
+
+def test_baseline_matches_on_message_not_line(tmp_path):
+    leftover = F.active(_suppressed_fixture_findings())[0]
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps({"accepted": [
+        {"rule": leftover.rule, "path": leftover.path,
+         # line intentionally absent: baseline survives line drift
+         "message": leftover.message}]}))
+    findings = run_paths([FIXTURES / "suppressed.py"], baseline=bl)
+    assert F.active(findings) == []
+    assert {f.suppressed for f in findings} == \
+        {"inline", "file", "baseline"}
+
+
+def test_write_baseline_round_trip(tmp_path):
+    findings = _suppressed_fixture_findings()
+    bl = tmp_path / "baseline.json"
+    F.write_baseline(bl, findings)
+    triples = F.load_baseline(bl)
+    # only the unsuppressed finding is accepted into the baseline
+    assert len(triples) == 1
+    assert F.active(F.apply_baseline(findings, triples)) == []
+
+
+# ------------------------------------------------------------------ CLI ----
+
+def test_cli_exit_codes(capsys):
+    bad = str(FIXTURES / "bad_determinism.py")
+    assert cli_main([bad]) == 1
+    assert cli_main([bad, "--fail-on", "never"]) == 0
+    assert cli_main([str(FIXTURES / "clean_determinism.py")]) == 0
+    out = capsys.readouterr().out
+    assert "0 error(s), 0 warning(s), 0 suppressed" in out
+
+
+def test_cli_json_report(tmp_path):
+    report = tmp_path / "report.json"
+    assert cli_main([str(FIXTURES / "bad_determinism.py"),
+                     "--json", str(report)]) == 1
+    data = json.loads(report.read_text())
+    assert data["summary"]["errors"] == len(data["findings"]) > 0
+    assert set(data["summary"]["rules"]) == \
+        {"RL101", "RL102", "RL103", "RL104", "RL105"}
+    sample = data["findings"][0]
+    assert {"rule", "severity", "path", "line", "message",
+            "hint", "suppressed"} <= set(sample)
+
+
+def test_cli_github_format(capsys):
+    assert cli_main([str(FIXTURES / "bad_determinism.py"),
+                     "--format", "github"]) == 1
+    out = capsys.readouterr().out
+    assert "::error file=tests/fixtures/analysis/bad_determinism.py," \
+        in out
+    assert "title=RL101" in out
+
+
+def test_cli_write_then_use_baseline(tmp_path):
+    bad = str(FIXTURES / "bad_determinism.py")
+    bl = tmp_path / "accepted.json"
+    assert cli_main([bad, "--baseline", str(bl),
+                     "--write-baseline"]) == 0
+    # with every current finding accepted, the same scope now passes
+    assert cli_main([bad, "--baseline", str(bl)]) == 0
+    # and a different file's findings still fail
+    assert cli_main([str(FIXTURES / "bad_effects.py"),
+                     "--baseline", str(bl)]) == 1
+
+
+# -------------------------------------------------------- repo CI gate ----
+
+def test_repo_sweep_is_clean():
+    findings = run_repo()
+    unsuppressed = [f for f in findings if not f.suppressed]
+    assert unsuppressed == [], "\n".join(f.render() for f in unsuppressed)
+
+
+def test_backend_registry_check_is_clean():
+    root = repo_root()
+    assert analyze_backend_registry(root / "src/repro/kernels") == []
+
+
+def test_rl302_flags_orphan_kernel_module(tmp_path):
+    (tmp_path / "backend.py").write_text(
+        "from repro.kernels import ref as R\n"
+        "from repro.kernels.flash_decode import flash_decode\n")
+    (tmp_path / "flash_decode.py").write_text("def flash_decode(): pass\n")
+    (tmp_path / "orphan.py").write_text("def orphan_kernel(): pass\n")
+    findings = analyze_backend_registry(tmp_path)
+    assert [f.rule for f in findings] == ["RL302"]
+    assert "'orphan'" in findings[0].message
+
+
+# ---------------------------------------------------- runtime mirrors ----
+
+def _mini_registry(*names):
+    reg = ToolRegistry()
+    for n in names:
+        reg.register(Tool(n, "lib", "doc", ()))
+    return reg
+
+
+def test_validate_effects_accepts_exact_coverage():
+    validate_effects(_mini_registry("a", "b"),
+                     {"a": ToolEffects(writes=frozenset({"handles"})),
+                      "b": ToolEffects(reads=frozenset({"map"}))})
+
+
+def test_validate_effects_rejects_coverage_gaps():
+    with pytest.raises(EffectsCoverageError, match="without effects"):
+        validate_effects(_mini_registry("a", "b"),
+                         {"a": ToolEffects()})
+    with pytest.raises(EffectsCoverageError, match="unregistered"):
+        validate_effects(_mini_registry("a"),
+                         {"a": ToolEffects(), "ghost": ToolEffects()})
+    with pytest.raises(EffectsCoverageError, match="unknown resources"):
+        validate_effects(_mini_registry("a"),
+                         {"a": ToolEffects(writes=frozenset({"nope"}))})
+
+
+def test_op_surface_signature_checks():
+    ok = lambda q, k, v, *, causal=True, window=0, cap=0.0, \
+        scale=0.0, q_offset=0: None
+    assert KB.check_op_signature("attention", ok) is None
+    # extra defaulted params are allowed (the reference attention's
+    # kv_len rides on exactly this rule)
+    extra_ok = lambda q, k, v, kv_len=None, *, causal=True, window=0, \
+        cap=0.0, scale=0.0, q_offset=0: None
+    assert KB.check_op_signature("attention", extra_ok) is None
+    renamed = lambda query, k, v, *, causal=True, window=0, cap=0.0, \
+        scale=0.0, q_offset=0: None
+    assert "positional params" in KB.check_op_signature(
+        "attention", renamed)
+    undefaulted_extra = lambda q, k, v, block_k, *, causal=True, \
+        window=0, cap=0.0, scale=0.0, q_offset=0: None
+    assert "without a default" in KB.check_op_signature(
+        "attention", undefaulted_extra)
+    missing_kw = lambda q, k, v, *, causal=True: None
+    assert "missing keyword" in KB.check_op_signature(
+        "attention", missing_kw)
+
+
+def test_register_backend_rejects_drifted_impl():
+    ref = KB.get_backend("reference")
+    broken = dataclasses.replace(
+        ref, name="broken",
+        router_topk=lambda wrong_name, k: None)
+    assert "router_topk" in KB.validate_backend(broken)
+    with pytest.raises(KB.BackendContractError, match="router_topk"):
+        KB.register_backend(broken)
+    assert "broken" not in KB.available_backends()
+    # the missing-impl defect maps to RL303's "not implemented"
+    hollow = dataclasses.replace(ref, name="hollow", mlstm_scan=None)
+    assert "not implemented" in KB.validate_backend(hollow)["mlstm_scan"]
+
+
+def test_both_required_backends_validate_clean():
+    for name in ("reference", "pallas"):
+        assert KB.validate_backend(KB.get_backend(name)) == {}

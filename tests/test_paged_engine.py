@@ -163,8 +163,12 @@ def test_oversize_prompt_finishes_cache_len_not_crash(planner):
 def test_kv_oom_finishes_impossible_requests(planner, base_engine):
     """A request that can never fit the physical pool finishes with
     finish_reason='kv_oom' instead of deadlocking the queue."""
+    # a deterministic injected clock (the engine never reads wall time
+    # itself): strictly positive, monotonically increasing stamps
+    ticks = iter(range(1, 10_000))
     eng = make_engine(planner, base_engine, kv_mode="paged",
-                      block_size=BS, kv_blocks=2)
+                      block_size=BS, kv_blocks=2,
+                      clock=lambda: float(next(ticks)))
     eng.add_request(list(range(5, 60)), max_new_tokens=4)   # needs 4 blk
     eng.add_request(list(range(5, 25)), max_new_tokens=2)   # fits
     done = {r.request_id: r for r in eng.run_until_done()}
