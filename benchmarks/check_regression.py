@@ -58,6 +58,10 @@ def _engine_metrics(d):
 def _cluster_metrics(d):
     aff = _row(d, policy="intent_affinity")
     rr = _row(d, policy="round_robin")
+    # stall-free scheduling section (cluster_bench.bench_interleave);
+    # the bench already hard-asserts gain >= 1.5x and parity — these
+    # gate against the committed baseline on top of that floor
+    im = d["interleave"]["meta"]
     return {
         "affinity_prefix_hit": aff["prefix_hit"],
         "affinity_beats_round_robin":
@@ -66,6 +70,10 @@ def _cluster_metrics(d):
             d["meta"]["tokens_identical_across_policies"],
         "tokens_out": rr["tokens_out"],
         "affinity_sla": aff["sla"],
+        "interleave_ttft_p99_gain": im["interleave_ttft_p99_gain"],
+        "interleave_tokens_identical":
+            im["interleave_tokens_identical"],
+        "interleave_tps_ratio": im["interleave_tps_ratio"],
     }
 
 
@@ -122,6 +130,11 @@ SPECS = {
         # stay exact, the token volume just must not collapse
         "tokens_out": ("higher", 0.1),
         "affinity_sla": ("higher", 0.1),
+        # stall-free scheduling: losing the interleaving TTFT win (or
+        # its token parity / throughput neutrality) is a regression
+        "interleave_ttft_p99_gain": ("higher", 0.1),
+        "interleave_tokens_identical": ("equal", 0.0),
+        "interleave_tps_ratio": ("higher", 0.05),
     }),
     "paging": (_paging_metrics, {
         "paged_memory_savings": ("higher", 0.1),

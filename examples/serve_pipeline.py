@@ -69,10 +69,23 @@ def main():
                          "weights here)")
     ap.add_argument("--draft-k", type=int, default=4,
                     help="draft tokens per speculative round (>= 1)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="chunked prefill: max prompt tokens per engine "
+                         "step, interleaved with decode (stall-free "
+                         "scheduling; default: monolithic prefill). "
+                         "Useful here — planner prompts carry ~2.5k-"
+                         "token intent catalogs")
+    ap.add_argument("--admission", default="fifo",
+                    choices=("fifo", "slack"),
+                    help="admission-queue order: arrival or earliest "
+                         "SLA deadline first")
     args = ap.parse_args()
     if args.spec_decode and args.draft_k < 1:
         ap.error(f"--spec-decode needs --draft-k >= 1, "
                  f"got {args.draft_k}")
+    if args.prefill_budget is not None and args.prefill_budget < 1:
+        ap.error(f"--prefill-budget must be >= 1, "
+                 f"got {args.prefill_budget}")
 
     # --- the serving fleet: engine(s) + one batched gate model -----------
     cfg = get_smoke_config("planner-proxy-100m")
@@ -90,14 +103,18 @@ def main():
                                kv_mode=args.kv_mode,
                                kv_blocks=args.kv_blocks,
                                block_size=args.block_size,
-                               spec_decode=spec)
+                               spec_decode=spec,
+                               prefill_budget=args.prefill_budget,
+                               admission=args.admission)
     else:
         engine = InferenceEngine(cfg, params, max_batch=4,
                                  cache_len=4096, backend=args.backend,
                                  kv_mode=args.kv_mode,
                                  kv_blocks=args.kv_blocks,
                                  block_size=args.block_size,
-                                 spec_decode=spec)
+                                 spec_decode=spec,
+                                 prefill_budget=args.prefill_budget,
+                                 admission=args.admission)
     classifier = BatchedNeuralIntentClassifier(cfg, params)
     print(f"planner engine up: {count_params_analytic(cfg)/1e6:.1f}M "
           f"params, {args.replicas} replica(s) x 4 slots; "

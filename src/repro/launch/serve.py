@@ -31,6 +31,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.models.model import init_params
 from repro.serving.cluster import ROUTER_POLICIES, EngineCluster
 from repro.serving.engine import InferenceEngine
+from repro.serving.sched import ADMISSION_POLICIES
 from repro.serving.sampling import SamplerConfig
 from repro.serving.specdec import SpecConfig
 from repro.serving.workload import (PROFILES, WorkloadConfig,
@@ -38,6 +39,11 @@ from repro.serving.workload import (PROFILES, WorkloadConfig,
                                     register_workload_prefixes,
                                     skewed_mix, uniform_mix)
 from repro.training.checkpoint import load_checkpoint
+
+
+def _fmt(v, unit: str = "") -> str:
+    """Render a possibly-None metric ("n/a": empty percentile series)."""
+    return "n/a" if v is None else f"{v:.0f}{unit}"
 
 
 def serve_cluster(cfg, params, args, spec_decode=None):
@@ -49,7 +55,11 @@ def serve_cluster(cfg, params, args, spec_decode=None):
                             kv_mode=args.kv_mode,
                             kv_blocks=args.kv_blocks,
                             block_size=args.block_size,
-                            spec_decode=spec_decode)
+                            spec_decode=spec_decode,
+                            prefill_budget=args.prefill_budget,
+                            interleave=not args.no_interleave,
+                            admission=args.admission,
+                            sla_spill=args.sla_spill)
     mix = (skewed_mix(hot_frac=args.skew) if args.skew > 0
            else uniform_mix())
     reqs = make_workload(WorkloadConfig(
@@ -64,10 +74,13 @@ def serve_cluster(cfg, params, args, spec_decode=None):
     print(f"cluster[{args.replicas}x{args.max_batch} slots, "
           f"router={args.router}] served {s['finished']}/{s['requests']} "
           f"requests in {s['ticks']} ticks ({dt:.2f}s wall)")
-    print(f"ttft p50/p95 {s['ttft_p50']:.0f}/{s['ttft_p95']:.0f} ticks | "
-          f"e2e p50/p95 {s['e2e_p50']:.0f}/{s['e2e_p95']:.0f} | "
-          f"queue-wait p95 {s['queue_wait_p95']:.0f} | "
-          f"SLA {100 * s['sla_attainment']:.1f}%")
+    print(f"ttft p50/p95/p99 {_fmt(s['ttft_p50'])}/{_fmt(s['ttft_p95'])}"
+          f"/{_fmt(s['ttft_p99'])} ticks | "
+          f"admit-wait p95 {_fmt(s['admit_wait_p95'])} | "
+          f"e2e p50/p95 {_fmt(s['e2e_p50'])}/{_fmt(s['e2e_p95'])} | "
+          f"SLA {100 * s['sla_attainment']:.1f}%"
+          + (f" | {s['sla_expired']} expired in queue"
+             if s["sla_expired"] else ""))
     print(f"prefix-hit ratio {s['prefix_hit_ratio']:.2f} | "
           f"{s['tokens_out']} tokens out")
     if spec_decode is not None:
@@ -122,6 +135,28 @@ def build_parser() -> argparse.ArgumentParser:
                          "(0 = uniform mix, 1 = all hot)")
     ap.add_argument("--turns", type=int, default=1,
                     help="max turns per session (cluster mode)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="chunked prefill: max prompt tokens processed "
+                         "per engine step (attn_chunk-aligned slabs; "
+                         "budgets below one chunk fall back to one "
+                         "whole chunk per step), interleaved with "
+                         "decode so long prompts never stall running "
+                         "streams. Default: monolithic admission-step "
+                         "prefill")
+    ap.add_argument("--no-interleave", action="store_true",
+                    help="with --prefill-budget: run each prefill to "
+                         "completion before decoding (the stall-prone "
+                         "baseline the benches compare against)")
+    ap.add_argument("--admission", default="fifo",
+                    choices=ADMISSION_POLICIES,
+                    help="admission-queue order: arrival (fifo) or "
+                         "earliest SLA deadline first (slack; also "
+                         "picks most-slack preemption victims)")
+    ap.add_argument("--sla-spill", action="store_true",
+                    help="intent_affinity router: spill a request to "
+                         "the least-loaded replica when its SLA slack "
+                         "is smaller than its home replica's load "
+                         "(cluster mode)")
     ap.add_argument("--spec-decode", action="store_true",
                     help="speculative decoding: draft --draft-k greedy "
                          "tokens per slot with a draft model sharing "
@@ -151,6 +186,15 @@ def validate_args(ap: argparse.ArgumentParser, args):
                  f"got {args.draft_k}")
     if args.replicas < 1:
         ap.error(f"--replicas must be >= 1, got {args.replicas}")
+    if args.prefill_budget is not None and args.prefill_budget < 1:
+        ap.error(f"--prefill-budget must be >= 1, "
+                 f"got {args.prefill_budget}")
+    if args.no_interleave and args.prefill_budget is None:
+        ap.error("--no-interleave only applies with --prefill-budget "
+                 "(monolithic prefill has nothing to interleave)")
+    if args.sla_spill and args.replicas < 2:
+        ap.error("--sla-spill needs --replicas >= 2 (router-level "
+                 "spill has nowhere to go on one replica)")
     return args
 
 
@@ -180,6 +224,9 @@ def main(argv=None):
                              kv_blocks=args.kv_blocks,
                              block_size=args.block_size,
                              spec_decode=spec,
+                             prefill_budget=args.prefill_budget,
+                             interleave=not args.no_interleave,
+                             admission=args.admission,
                              # the launcher is the wall-clock boundary:
                              # live latency numbers want real time
                              clock=time.time)

@@ -88,7 +88,12 @@ class Router:
     name = "base"
 
     def select(self, views: Sequence[ReplicaView],
-               prefix_key: Optional[str] = None) -> int:
+               prefix_key: Optional[str] = None,
+               slack: Optional[int] = None) -> int:
+        """Place one request. ``slack`` is its SLA budget in ticks
+        (``sla_ticks``) at arrival, None when it carries no deadline —
+        policies may use it to keep tight-deadline traffic off loaded
+        replicas; the stateless policies ignore it."""
         raise NotImplementedError
 
     def reset(self):
@@ -101,7 +106,7 @@ class RoundRobinRouter(Router):
     def __init__(self):
         self._next = 0
 
-    def select(self, views, prefix_key=None) -> int:
+    def select(self, views, prefix_key=None, slack=None) -> int:
         i = views[self._next % len(views)].index
         self._next += 1
         return i
@@ -113,20 +118,26 @@ class RoundRobinRouter(Router):
 class LeastLoadedRouter(Router):
     name = "least_loaded"
 
-    def select(self, views, prefix_key=None) -> int:
+    def select(self, views, prefix_key=None, slack=None) -> int:
         return _least_loaded(views)
 
 
 class IntentAffinityRouter(Router):
     name = "intent_affinity"
 
-    def __init__(self, spill_load: Optional[int] = None):
+    def __init__(self, spill_load: Optional[int] = None,
+                 sla_spill: bool = False):
         # spill_load: home-replica load (busy+queued) at which keyed
         # traffic overflows to least-loaded; None = never spill (keeps
-        # placement a pure function of the key, the parity-test mode)
+        # placement a pure function of the key, the parity-test mode).
+        # sla_spill: additionally spill a deadline-carrying request
+        # whose slack is smaller than the home replica's load — the
+        # queue ahead of it would eat its whole SLA budget before it
+        # even admits, so prefix affinity can't be worth the miss
         self.spill_load = spill_load
+        self.sla_spill = sla_spill
 
-    def select(self, views, prefix_key=None) -> int:
+    def select(self, views, prefix_key=None, slack=None) -> int:
         if prefix_key is None:
             return _least_loaded(views)
         holders = [v.index for v in views if v.holds_prefix]
@@ -136,10 +147,14 @@ class IntentAffinityRouter(Router):
         if (self.spill_load is not None
                 and by_index[home].load >= self.spill_load):
             return _least_loaded(views)
+        if (self.sla_spill and slack is not None
+                and by_index[home].load > slack):
+            return _least_loaded(views)
         return home
 
 
-def make_router(policy, spill_load: Optional[int] = None) -> Router:
+def make_router(policy, spill_load: Optional[int] = None,
+                sla_spill: bool = False) -> Router:
     if isinstance(policy, Router):
         return policy
     if policy == "round_robin":
@@ -147,7 +162,8 @@ def make_router(policy, spill_load: Optional[int] = None) -> Router:
     if policy == "least_loaded":
         return LeastLoadedRouter()
     if policy == "intent_affinity":
-        return IntentAffinityRouter(spill_load=spill_load)
+        return IntentAffinityRouter(spill_load=spill_load,
+                                    sla_spill=sla_spill)
     raise ValueError(f"unknown router {policy!r}; "
                      f"choose from {ROUTER_POLICIES}")
 
@@ -165,12 +181,18 @@ class RequestTrace:
     session_id: Optional[int]
     turn: int
     admit_tick: Optional[int] = None
+    # tick the request's FIRST TOKEN was sampled (the engine's
+    # first_token_step) — true TTFT; admit_tick only measures queue wait
+    first_token_tick: Optional[int] = None
     finish_tick: Optional[int] = None
     request: Optional[Request] = None   # engine object (output, reason)
 
 
-def _pct(values: List[int], q: float) -> float:
-    return float(np.percentile(np.asarray(values), q)) if values else 0.0
+def _pct(values: List[int], q: float) -> Optional[float]:
+    """Percentile, or None for an empty series — 0.0 would read as a
+    perfect latency for a run that finished nothing (the bench renders
+    None as "n/a")."""
+    return float(np.percentile(np.asarray(values), q)) if values else None
 
 
 @dataclass
@@ -188,16 +210,34 @@ class ClusterStats:
 
     def summary(self) -> Dict:
         done = [t for t in self.traces if t.finish_tick is not None]
-        # first token lands at the end of the admit tick; +1 so a
-        # same-tick admission costs one tick, not zero
-        ttft = [t.admit_tick - t.arrival_tick + 1 for t in done]
-        e2e = [t.finish_tick - t.arrival_tick + 1 for t in done]
-        qwait = [t.admit_tick - t.arrival_tick for t in done]
+        # sla_expired requests were dropped from the queue without ever
+        # producing a token: they count as requests and SLA misses, but
+        # latency percentiles are over requests actually served
+        served = [t for t in done
+                  if not (t.request is not None
+                          and t.request.finish_reason == "sla_expired")]
+        # TRUE time-to-first-token: the tick the first token was
+        # sampled, which includes queue wait AND prefill time. (+1 so a
+        # same-tick arrival-to-token costs one tick, not zero.) The old
+        # admit-proxy metric — which saw none of the prefill — survives
+        # as admit_wait_*.
+        ttft = [t.first_token_tick - t.arrival_tick + 1 for t in served
+                if t.first_token_tick is not None]
+        awt = [t.admit_tick - t.arrival_tick + 1 for t in served
+               if t.admit_tick is not None]
+        e2e = [t.finish_tick - t.arrival_tick + 1 for t in served]
+        qwait = [t.admit_tick - t.arrival_tick for t in served
+                 if t.admit_tick is not None]
         # a deadline-carrying request still in flight at cutoff has
-        # missed its SLA by construction — count it, don't drop it
+        # missed its SLA by construction — count it, don't drop it;
+        # sla_expired drops finish past their deadline, so they are
+        # automatic misses under the same formula
         sla = [t.finish_tick is not None
                and (t.finish_tick - t.arrival_tick + 1) <= t.sla_ticks
                for t in self.traces if t.sla_ticks is not None]
+        expired = sum(1 for t in done
+                      if t.request is not None
+                      and t.request.finish_reason == "sla_expired")
         adm = sum(r["admissions"] for r in self.per_replica)
         hits = sum(r["prefix_hits"] for r in self.per_replica)
         # speculative decoding: fleet accept rate and tokens per target
@@ -220,8 +260,12 @@ class ClusterStats:
         return {
             "ticks": self.ticks,
             "requests": len(self.traces),
-            "finished": len(done),
+            "finished": len(served),
+            "sla_expired": expired,
             "ttft_p50": _pct(ttft, 50), "ttft_p95": _pct(ttft, 95),
+            "ttft_p99": _pct(ttft, 99),
+            "admit_wait_p50": _pct(awt, 50),
+            "admit_wait_p95": _pct(awt, 95),
             "e2e_p50": _pct(e2e, 50), "e2e_p95": _pct(e2e, 95),
             "queue_wait_p50": _pct(qwait, 50),
             "queue_wait_p95": _pct(qwait, 95),
@@ -258,6 +302,7 @@ class EngineCluster:
     def __init__(self, cfg=None, params=None, n_replicas: int = 2, *,
                  engines: Optional[List[InferenceEngine]] = None,
                  router="round_robin", spill_load: Optional[int] = None,
+                 sla_spill: bool = False,
                  max_batch: Optional[int] = None,
                  cache_len: Optional[int] = None,
                  seed: Optional[int] = None,
@@ -265,19 +310,25 @@ class EngineCluster:
                  kv_mode: Optional[str] = None,
                  kv_blocks: Optional[int] = None,
                  block_size: Optional[int] = None,
-                 spec_decode=None):
+                 spec_decode=None,
+                 prefill_budget: Optional[int] = None,
+                 interleave: Optional[bool] = None,
+                 admission: Optional[str] = None):
         if engines is not None:
             # prebuilt replicas keep their own configuration; sizing
             # kwargs would be silently dropped, so refuse them
             if any(v is not None for v in (cfg, params, max_batch,
                                            cache_len, seed, backend,
                                            kv_mode, kv_blocks,
-                                           block_size, spec_decode)):
+                                           block_size, spec_decode,
+                                           prefill_budget, interleave,
+                                           admission)):
                 raise ValueError(
                     "engines= is mutually exclusive with cfg/params/"
                     "max_batch/cache_len/seed/backend/kv_mode/"
-                    "kv_blocks/block_size/spec_decode (prebuilt "
-                    "replicas keep their own configuration)")
+                    "kv_blocks/block_size/spec_decode/prefill_budget/"
+                    "interleave/admission (prebuilt replicas keep "
+                    "their own configuration)")
             self.replicas = list(engines)
         else:
             assert cfg is not None and params is not None
@@ -292,7 +343,11 @@ class EngineCluster:
                                     backend=backend, kv_mode=kv_mode,
                                     kv_blocks=kv_blocks,
                                     block_size=block_size,
-                                    spec_decode=spec_decode)
+                                    spec_decode=spec_decode,
+                                    prefill_budget=prefill_budget,
+                                    interleave=(True if interleave
+                                                is None else interleave),
+                                    admission=admission or "fifo")
                 if self.replicas:
                     # identical (cfg, cache_len, backend) closures =>
                     # replicas share one jit cache: compile once, not N×
@@ -303,7 +358,8 @@ class EngineCluster:
                         e._verify = e0._verify
                         e.spec.share_compiled(e0.spec)
                 self.replicas.append(e)
-        self.router = make_router(router, spill_load=spill_load)
+        self.router = make_router(router, spill_load=spill_load,
+                                  sla_spill=sla_spill)
         self.backend = self.replicas[0].backend
         self.kv_mode = self.replicas[0].kv_mode
         self.spec_k = self.replicas[0].spec_k
@@ -358,8 +414,10 @@ class EngineCluster:
                                           and prefix_key in e.prefixes))
                 for i, e in enumerate(self.replicas)]
 
-    def route(self, prefix_key: Optional[str] = None) -> int:
-        return self.router.select(self._views(prefix_key), prefix_key)
+    def route(self, prefix_key: Optional[str] = None,
+              slack: Optional[int] = None) -> int:
+        return self.router.select(self._views(prefix_key), prefix_key,
+                                  slack)
 
     def submit(self, prompt, max_new_tokens: int = 32,
                sampler: SamplerConfig = SamplerConfig(),
@@ -369,10 +427,10 @@ class EngineCluster:
                sla_ticks: Optional[int] = None,
                index: int = -1, turn: int = 0) -> Tuple[int, int]:
         """Route one request; returns (replica index, request id)."""
-        r = self.route(prefix_key)
+        r = self.route(prefix_key, slack=sla_ticks)
         rid = self.replicas[r].add_request(
             prompt, max_new_tokens, sampler, prefix_key=prefix_key,
-            session_id=session_id)
+            session_id=session_id, sla_ticks=sla_ticks)
         self.traces[(r, rid)] = RequestTrace(
             index=index, replica=r, request_id=rid, intent=intent,
             prefix_key=prefix_key, arrival_tick=self.tick,
@@ -409,8 +467,14 @@ class EngineCluster:
             for req in done:
                 t = self.traces.get((i, req.request_id))
                 if t is not None:
+                    # engine step numbers advance in lockstep with the
+                    # cluster tick clock (both count the same step()
+                    # calls), so the engine's stamps ARE cluster ticks
                     if t.admit_tick is None:
-                        t.admit_tick = self.tick
+                        t.admit_tick = (req.admit_step
+                                        if req.admit_step is not None
+                                        else self.tick)
+                    t.first_token_tick = req.first_token_step
                     t.finish_tick = self.tick
                     t.request = req
                     self._finished_traces.append(t)
@@ -418,7 +482,9 @@ class EngineCluster:
                 if s is not None:
                     t = self.traces.get((i, s.request_id))
                     if t is not None and t.admit_tick is None:
-                        t.admit_tick = self.tick
+                        t.admit_tick = (s.admit_step
+                                        if s.admit_step is not None
+                                        else self.tick)
             finished.extend(done)
         self.tick += 1
         return finished

@@ -50,12 +50,25 @@ slot (B,) fill levels via scalar prefetch), MoE routing through the
 fused top-k kernel and SSM/mLSTM state scans through their Pallas
 kernels; ``"reference"`` (the default) keeps the pure-jnp paths.
 DESIGN.md §Kernel backends has the selection rules and parity contract.
+
+``prefill_budget`` makes admission-time prefill PREEMPTIBLE: instead of
+running a request's whole prefill inside its admission step, the engine
+splits it into ``attn_chunk``-aligned slabs (the ``prefill_extend``
+machinery — bitwise identical to monolithic prefill at any seam) and
+spends at most ``max(1, prefill_budget // attn_chunk)`` slabs per step
+across all in-flight prefills, interleaved with decode — so one long
+prompt no longer stalls every co-resident stream. ``interleave=False``
+keeps the budgeted cost model but runs prefill to completion (decode
+stalls while any prefill is pending) — the run-to-completion baseline
+the benches compare against. ``admission`` selects the queue order:
+``"fifo"`` (arrival) or ``"slack"`` (earliest SLA deadline first, and
+most-slack-first preemption victims). DESIGN.md §Stall-free scheduling.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +80,7 @@ from repro.models.model import (decode_step, init_cache, init_paged_cache,
                                 prefill, prefill_extend, verify_extend)
 from repro.serving.kvpool import BlockTable, KVBlockPool
 from repro.serving.sampling import SamplerConfig, sample
+from repro.serving.sched import AdmissionQueue, deadline_step, victim_key
 from repro.serving.specdec import SpecConfig, SpecDecoder, check_spec_stack
 from repro.serving.tokenizer import SPECIALS, TOKENIZER
 
@@ -81,15 +95,27 @@ class Request:
     sampler: SamplerConfig = field(default_factory=SamplerConfig)
     prefix_key: Optional[str] = None
     session_id: Optional[int] = None
+    # SLA deadline budget in engine steps (ticks) from enqueue; None =
+    # no deadline. Drives slack admission order and queued-expiry drops.
+    sla_ticks: Optional[int] = None
     # filled by the engine:
     output: List[int] = field(default_factory=list)
     done: bool = False
     # "eos" | "max_new_tokens" | "cache_len" | "kv_oom" (paged: the
-    # request can never fit the physical block budget)
+    # request can never fit the physical block budget) | "sla_expired"
+    # (deadline passed while still queued — dropped, never admitted)
     finish_reason: Optional[str] = None
     enqueue_t: float = 0.0
     first_token_t: float = 0.0
     finish_t: float = 0.0
+    # tick-based latency stamps (engine step numbers; the cluster's tick
+    # clock advances in lockstep, so these ARE cluster ticks). The wall
+    # times above come from the injected clock and stay 0.0 under the
+    # deterministic zero clock; the step stamps always advance.
+    enqueue_step: int = 0
+    admit_step: Optional[int] = None
+    first_token_step: Optional[int] = None
+    finish_step: Optional[int] = None
     # paged preemption: host-side copy of the KV rows generated so far
     # ({"segments": ..., "pos": n}); set while the request sits requeued
     swap: Optional[dict] = None
@@ -100,6 +126,24 @@ class CachedPrefix:
     ids: List[int]
     cache: dict          # B=1 prefilled cache pytree (scalar pos)
     logits: jnp.ndarray  # (1,V) logits after the prefix's last token
+
+
+@dataclass
+class PendingPrefill:
+    """An admission whose prefill is in flight under ``prefill_budget``:
+    the request owns its slot (and, paged, its block table) from
+    admission, but its B=1 cache advances one budgeted chunk at a time
+    across engine steps instead of monolithically inside one step. The
+    first token is sampled — and the cache installed into the batched
+    slot — only when the last chunk lands."""
+    req: Request
+    slot: int
+    toks: List[int]                  # full prompt ids
+    i: int                           # ids already in the cache
+    logits: Optional[jnp.ndarray]    # (1,V) after toks[:i]; None pre-head
+    cache: Optional[dict]            # B=1 cache pytree; None pre-head
+    table: Optional[BlockTable]      # paged: blocks held from admission
+    j0: int                          # paged: shared-prefix scatter skip
 
 
 def _insert_slot(batched, single, slot: int):
@@ -209,6 +253,9 @@ class InferenceEngine:
                  kv_blocks: Optional[int] = None,
                  block_size: Optional[int] = None,
                  spec_decode: Optional[SpecConfig] = None,
+                 prefill_budget: Optional[int] = None,
+                 interleave: bool = True,
+                 admission: str = "fifo",
                  clock: Optional[Callable[[], float]] = None):
         from repro.kernels.backend import get_backend
         self.cfg = cfg
@@ -263,9 +310,22 @@ class InferenceEngine:
             self.cache = init_cache(cfg, max_batch, cache_len)
             self.cache["pos"] = jnp.zeros((max_batch,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * max_batch
-        # deque: admission pops the head once per free slot; a list's
-        # pop(0) is O(n) and goes quadratic under cluster-scale queues
-        self.queue: Deque[Request] = deque()
+        # admission order is a policy now (serving/sched.py): "fifo"
+        # keeps the seed deque behavior, "slack" admits by SLA deadline
+        self.admission = admission
+        self.queue: AdmissionQueue = AdmissionQueue(admission)
+        self.interleave = interleave
+        self.prefill_budget = prefill_budget
+        # engine step counter — the tick clock every latency stamp
+        # (enqueue/admit/first-token/finish steps) is expressed in
+        self.step_no = 0
+        # slot -> in-flight chunked prefill; _pending_rr is the
+        # deficit-round-robin service order the per-step chunk
+        # allowance rotates over (one chunk per turn), so a short
+        # prompt drains past a long one instead of queuing behind its
+        # whole prefill, and nothing starves
+        self._pending: Dict[int, PendingPrefill] = {}
+        self._pending_rr: deque = deque()
         self.prefixes: Dict[str, CachedPrefix] = {}
         self._next_id = 0
         self._next_session = 0
@@ -274,6 +334,12 @@ class InferenceEngine:
                       "prefix_tokens_saved": 0, "admissions": 0,
                       "prefix_registrations": 0, "preemptions": 0,
                       "resumes": 0, "prefix_evictions": 0,
+                      # stall-free scheduling: chunked-prefill slabs
+                      # run, decode steps skipped behind pending
+                      # prefills (interleave=False only), queued
+                      # requests dropped past their SLA deadline
+                      "prefill_chunks": 0, "stall_ticks": 0,
+                      "sla_expired": 0,
                       # speculative decoding (zero when disabled):
                       # rounds = verify forwards, drafted/accepted =
                       # draft-token counts (accept rate = their ratio)
@@ -301,6 +367,16 @@ class InferenceEngine:
                             and not cfg.n_enc_layers)
         self._pad_extend = (self._can_extend
                             and kinds <= {"full", "dense", "moe"})
+        if prefill_budget is not None:
+            if prefill_budget < 1:
+                raise ValueError(f"prefill_budget must be >= 1 token "
+                                 f"per step, got {prefill_budget}")
+            if not self._can_extend:
+                raise ValueError(
+                    "prefill_budget (chunked prefill) needs a stack "
+                    "that supports multi-token prefill_extend — no "
+                    "windowed/recurrent kinds and no encoder; got "
+                    f"kinds {sorted(kinds)}")
         self._last_tokens = jnp.zeros((max_batch, 1), jnp.int32)
 
         # speculative decoding: draft K cheap tokens per slot, verify
@@ -320,15 +396,17 @@ class InferenceEngine:
     def add_request(self, prompt_text_or_ids, max_new_tokens: int = 32,
                     sampler: SamplerConfig = SamplerConfig(),
                     prefix_key: Optional[str] = None,
-                    session_id: Optional[int] = None) -> int:
+                    session_id: Optional[int] = None,
+                    sla_ticks: Optional[int] = None) -> int:
         ids = (TOKENIZER.encode_with_specials(prompt_text_or_ids)
                if isinstance(prompt_text_or_ids, str)
                else list(prompt_text_or_ids))
         req = Request(self._next_id, ids, max_new_tokens, sampler,
                       prefix_key=prefix_key, session_id=session_id,
-                      enqueue_t=self._clock())
+                      sla_ticks=sla_ticks, enqueue_t=self._clock(),
+                      enqueue_step=self.step_no)
         self._next_id += 1
-        self.queue.append(req)
+        self.queue.push(req)
         return req.request_id
 
     # ----------------------------------------------- load introspection ----
@@ -375,6 +453,9 @@ class InferenceEngine:
                 self.kv_blocks, jnp.int32)
         self.slots = [None] * self.max_batch
         self.queue.clear()
+        self._pending.clear()
+        self._pending_rr.clear()
+        self.step_no = 0
         self.prefixes.clear()
         self._next_id = 0
         self._next_session = 0
@@ -560,17 +641,23 @@ class InferenceEngine:
         self.slots[slot] = None
         self.cache["pos"] = self.cache["pos"].at[slot].set(0)
         self._release_slot(slot)
-        self.queue.appendleft(req)
+        # FIFO requeues at the head (the victim resumes before new
+        # arrivals); slack mode re-competes by deadline
+        self.queue.push(req, front=True)
         self.stats["preemptions"] += 1
 
     def _finish_now(self, req: Request, reason: str):
         req.done = True
         req.finish_reason = reason
         req.finish_t = self._clock()
+        req.finish_step = self.step_no
         if not req.first_token_t:
             # finished without ever sampling (paged cache_len/kv_oom
-            # refusals): leave no 0.0 sentinel for TTFT math downstream
+            # refusals, sla_expired drops): leave no 0.0 sentinel for
+            # TTFT math downstream
             req.first_token_t = req.finish_t
+        if req.first_token_step is None:
+            req.first_token_step = req.finish_step
 
     def _ensure_room(self, width: int = 1) -> List[Request]:
         """Pre-decode: every active slot must own blocks for the
@@ -578,13 +665,18 @@ class InferenceEngine:
         speculative verify — rejected rows stay in blocks the slot
         already owns, so rollback never re-enters this path). Under
         memory pressure, escalate: evict cold prefix pins (inside
-        _reserve), then preempt-and-requeue the lowest-priority
-        (latest-admitted) running request — never drop it. A lone
+        _reserve), then preempt-and-requeue the lowest-priority running
+        request — never drop it. "Lowest priority" is the admission
+        policy's call (sched.victim_key): FIFO preempts the
+        latest-admitted request (the seed rule), slack mode the one
+        with the most deadline slack. Pending chunked prefills are
+        neither growers (their blocks were sized at admission) nor
+        victims (their KV lives host-side until install). A lone
         request that has outgrown the whole pool finishes with
         ``kv_oom`` (nothing left to preempt)."""
         finished: List[Request] = []
         for i in range(self.max_batch):
-            if self.slots[i] is None:
+            if self.slots[i] is None or i in self._pending:
                 continue
             table = self.tables[i]
             needed_rows = min(table.n_tokens + width, self.cache_len)
@@ -598,9 +690,10 @@ class InferenceEngine:
                         self.cache["block_tab"].at[i, j].set(block)
                     continue
                 active = [j for j in range(self.max_batch)
-                          if self.slots[j] is not None]
-                victim = max(active,
-                             key=lambda j: self.slots[j].request_id)
+                          if self.slots[j] is not None
+                          and j not in self._pending]
+                victim = max(active, key=lambda j: victim_key(
+                    self.slots[j], self.admission))
                 if victim == i and len(active) == 1:
                     req = self.slots[i]
                     self._finish_now(req, "kv_oom")
@@ -691,6 +784,7 @@ class InferenceEngine:
                          req.sampler)[0])
         req.output.append(tok)
         req.first_token_t = self._clock()
+        req.first_token_step = self.step_no
         if tok == SPECIALS["<eos>"] or \
                 len(req.output) >= req.max_new_tokens:
             self._finish_now(req, "eos" if tok == SPECIALS["<eos>"]
@@ -698,27 +792,53 @@ class InferenceEngine:
             return True
         return False
 
+    def _drop_expired(self) -> List[Request]:
+        """Drop queue heads whose SLA deadline has already passed while
+        waiting: admitting them would burn a slot (and, paged, KV
+        blocks) on a guaranteed SLA miss. Only fresh requests are
+        dropped — a preempted request (non-empty output) already holds
+        generated tokens and always resumes. Deterministic: only the
+        queue's own order and ``step_no`` decide."""
+        dropped: List[Request] = []
+        while self.queue:
+            req = self.queue.peek()
+            if req.output or self.step_no < deadline_step(req):
+                break
+            self.queue.pop()
+            self._finish_now(req, "sla_expired")
+            self.stats["sla_expired"] += 1
+            dropped.append(req)
+        return dropped
+
     def _admit(self) -> List[Request]:
-        """Prefill queued requests into free slots; returns the ones
-        whose admission token was already terminal."""
+        """Prefill queued requests into free slots (or, under
+        ``prefill_budget``, start their chunked prefills); returns the
+        ones whose admission token was already terminal plus any
+        expired-in-queue drops."""
         if self.kv_mode == "paged":
             return self._admit_paged()
-        finished: List[Request] = []
+        finished: List[Request] = self._drop_expired()
         free = deque(self._free_slots())
         while free and self.queue:
             slot = free[0]
-            req = self.queue.popleft()
-            if self.spec is not None and \
+            req = self.queue.pop()
+            if (self.spec is not None or self.prefill_budget is not None) and \
                     len(req.prompt) >= self.cache_len:
                 # plain dense truncates the prefill and emits a token
                 # or two before dying with "cache_len"; that clamped
                 # overflow write cannot be reproduced by one verify
-                # forward, so spec mode refuses up front — the paged
-                # engine's semantics
+                # forward — or replayed chunk-by-chunk — so spec and
+                # budget modes refuse up front (the paged semantics)
                 self._finish_now(req, "cache_len")
                 finished.append(req)
                 continue
             self.stats["admissions"] += 1
+            req.admit_step = self.step_no
+            if self.prefill_budget is not None:
+                free.popleft()
+                self._start_pending(slot, req, self._prefix_hit(req),
+                                    None, 0)
+                continue
             logits, cache1, _ = self._prefill_request(req)
             if self._first_token(req, logits):
                 finished.append(req)
@@ -741,24 +861,24 @@ class InferenceEngine:
         admitted or dropped. Requests that can never fit the pool finish
         immediately with ``kv_oom``; preempted requests at the head are
         restored from their swap payload without recomputation."""
-        finished: List[Request] = []
+        finished: List[Request] = self._drop_expired()
         free = deque(self._free_slots())
         while free and self.queue:
             slot = free[0]
-            req = self.queue[0]
+            req = self.queue.peek()
             if req.swap is not None:                       # resume
                 total = req.swap["pos"]
                 # +1: room for the decode write this same step — without
                 # it a resumed request preempts itself right back out
                 need = self.pool.blocks_needed(total + 1)
                 if need > self.pool.n_blocks:
-                    self.queue.popleft()
+                    self.queue.pop()
                     self._finish_now(req, "kv_oom")
                     finished.append(req)
                     continue
                 if not self._reserve(need):
                     break                                  # wait
-                self.queue.popleft()
+                self.queue.pop()
                 # hold the decode-write headroom block NOW — a reserve
                 # that is only re-checked later can be consumed by the
                 # next admission in this same loop
@@ -792,7 +912,7 @@ class InferenceEngine:
                 # dense truncates the prefill and emits a token or two
                 # before dying with "cache_len" — paged refuses up front
                 # instead of letting the block math run off the table
-                self.queue.popleft()
+                self.queue.pop()
                 self._finish_now(req, "cache_len")
                 finished.append(req)
                 continue
@@ -812,7 +932,7 @@ class InferenceEngine:
             # +1 as above: prompt blocks plus the imminent decode write
             need = self.pool.blocks_needed(total + 1) - j0
             if need > self.pool.n_blocks:
-                self.queue.popleft()
+                self.queue.pop()
                 self._finish_now(req, "kv_oom")
                 finished.append(req)
                 continue
@@ -830,12 +950,29 @@ class InferenceEngine:
                     need = self.pool.blocks_needed(total + 1)
                 if not self._reserve(need):
                     # the head can never fit — fail it, don't deadlock
-                    self.queue.popleft()
+                    self.queue.pop()
                     self._finish_now(req, "kv_oom")
                     finished.append(req)
                     continue
-            self.queue.popleft()
+            self.queue.pop()
             self.stats["admissions"] += 1
+            req.admit_step = self.step_no
+            if self.prefill_budget is not None:
+                # chunked admission: take the blocks NOW (same math as
+                # the monolithic path below) so co-resident decodes
+                # cannot starve the in-flight prefill of its own rows,
+                # then advance chunk-by-chunk across steps
+                if ptab is not None:
+                    table = self.pool.fork(ptab, total)
+                    self.pool.cow_from(table, j0)
+                    self.pool.grow(table, total + 1)
+                else:
+                    table = self.pool.alloc(total + 1)
+                table.n_tokens = total
+                free.popleft()
+                self._start_pending(slot, req, pref, table, j0)
+                self._note_kv_peak()
+                continue
             logits, cache1, _ = self._prefill_request(req, pref)
             if self._first_token(req, logits):
                 finished.append(req)
@@ -861,22 +998,164 @@ class InferenceEngine:
             free.popleft()
         return finished
 
+    def _start_pending(self, slot: int, req: Request,
+                       pref: Optional[CachedPrefix],
+                       table: Optional[BlockTable], j0: int):
+        """Open a chunked prefill: the request takes its slot (and, in
+        paged mode, its pre-allocated block table) immediately, but its
+        B=1 cache is built across subsequent steps by
+        ``_advance_pendings``. A prefix hit seeds the cache from the
+        registered prefill exactly like the monolithic path."""
+        i, logits, cache = 0, None, None
+        if pref is not None:
+            i = len(pref.ids)
+            logits = pref.logits
+            cache = {"segments": pref.cache["segments"],
+                     "pos": pref.cache["pos"]}
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_tokens_saved"] += i
+        else:
+            self.stats["prefills"] += 1
+        self.slots[slot] = req
+        self._pending[slot] = PendingPrefill(
+            req=req, slot=slot, toks=list(req.prompt), i=i,
+            logits=logits, cache=cache, table=table, j0=j0)
+        self._pending_rr.append(slot)
+
+    def _advance_pending(self, p: PendingPrefill, chunks: int) -> int:
+        """Spend up to ``chunks`` whole attn_chunk slabs advancing one
+        pending prefill; returns the slabs consumed. Every call is the
+        same ``prefill``/``prefill_extend`` sequence
+        ``advance_cache_through`` would issue, just spread across
+        steps — the chunk-seam parity of prefill_extend (DESIGN.md
+        §Prefix caching) makes the result bitwise identical to a
+        monolithic prefill no matter where the budget cuts."""
+        from repro.common.perf import get_flags
+        align = get_flags().attn_chunk
+        spent = 0
+        while spent < chunks and p.i < len(p.toks):
+            rem = len(p.toks) - p.i
+            if p.cache is None:
+                # head: one B=1 prefill over the first chunk (or the
+                # whole short prompt)
+                n = min(rem, align)
+                head = jnp.asarray(p.toks[:n], jnp.int32)[None]
+                logits, cache = self._prefill(self.params,
+                                              {"tokens": head})
+                cache = dict(cache)
+                cache["pos"] = jnp.asarray(n, jnp.int32)
+                p.logits, p.cache = logits, cache
+                p.i = n
+            elif rem >= align:
+                chunk = jnp.asarray(p.toks[p.i:p.i + align],
+                                    jnp.int32)[None]
+                p.logits, p.cache = self._extend(
+                    self.params, p.cache, {"tokens": chunk}, align)
+                p.i += align
+            else:
+                # bucket-padded remainder — advance_cache_through's
+                # tail rule (cap the pad width at the cache end)
+                rest = p.toks[p.i:]
+                room = self.cache_len - int(p.cache["pos"])
+                if self._pad_extend and rem < room:
+                    width = min(1 << (rem - 1).bit_length(), room)
+                    rest = rest + [0] * (width - rem)
+                chunk = jnp.asarray(rest, jnp.int32)[None]
+                p.logits, p.cache = self._extend(
+                    self.params, p.cache, {"tokens": chunk}, rem)
+                p.i = len(p.toks)
+            spent += 1
+        self.stats["prefill_chunks"] += spent
+        return spent
+
+    def _complete_pending(self, slot: int) -> Optional[Request]:
+        """Last chunk landed: sample the admission token and install
+        the finished B=1 cache into the batched slot (dense copy or
+        paged scatter — identical to the monolithic admission tail).
+        Returns the request when its first token was already terminal
+        (the slot frees without ever decoding)."""
+        p = self._pending.pop(slot)
+        req = p.req
+        if self._first_token(req, p.logits):
+            self.slots[slot] = None
+            if self.kv_mode == "paged":
+                self.pool.free(p.table)
+            return req
+        if self.kv_mode == "paged":
+            self._install(slot, req, p.table, p.cache["segments"],
+                          scatter_from=p.j0)
+        else:
+            self.cache = _insert_slot(self.cache, p.cache, slot)
+            self.cache["pos"] = self.cache["pos"].at[slot].set(
+                len(req.prompt))
+        self._last_tokens = self._last_tokens.at[slot, 0].set(
+            req.output[-1])
+        if self.spec is not None:
+            self.spec.admit(slot, req.prompt)
+        return None
+
+    def _advance_pendings(self) -> List[Request]:
+        """Spend this step's prefill budget — ``max(1, prefill_budget
+        // attn_chunk)`` slabs (a budget smaller than one chunk falls
+        back to whole-chunk granularity) — over pending prefills in
+        deficit round-robin: one chunk per turn, an unfinished prefill
+        rotates to the back. A short prompt therefore drains past a
+        long one in a few turns instead of queuing behind its whole
+        prefill (head-of-line order would stall every wavemate's first
+        token for the longest prompt), and the rotation is
+        starvation-free: with k pendings every prefill advances at
+        least every k turns. A prefill that finishes completes
+        immediately: its admission token is emitted this step and the
+        slot joins this same step's decode, matching the monolithic
+        path's timing relative to prefill completion."""
+        from repro.common.perf import get_flags
+        allowance = max(1, self.prefill_budget // get_flags().attn_chunk)
+        finished: List[Request] = []
+        while allowance > 0 and self._pending_rr:
+            slot = self._pending_rr[0]
+            p = self._pending[slot]
+            allowance -= self._advance_pending(p, 1)
+            if p.i >= len(p.toks):
+                self._pending_rr.popleft()
+                done = self._complete_pending(slot)
+                if done is not None:
+                    finished.append(done)
+            else:
+                self._pending_rr.rotate(-1)
+        return finished
+
     def step(self) -> List[Request]:
-        """One engine iteration: admit from queue, decode one token for
-        every active slot — or, with spec decode on, draft K cheap
-        tokens per slot and verify them in one target forward, emitting
-        1..K+1 tokens per slot (_spec_step). Returns newly finished
-        requests (including any that terminated on their admission
-        token). Paged mode additionally grows block tables before the
+        """One engine iteration (one tick of ``step_no``): admit from
+        the queue, advance pending chunked prefills by the per-step
+        budget, then decode one token for every active slot — or, with
+        spec decode on, draft K cheap tokens per slot and verify them
+        in one target forward, emitting 1..K+1 tokens per slot
+        (_spec_step). With ``interleave=False`` decode (and spec) is
+        skipped while any prefill is pending — the run-to-completion
+        baseline. Returns newly finished requests (including any that
+        terminated on their admission token and expired-in-queue
+        drops). Paged mode additionally grows block tables before the
         decode/verify writes and may preempt-and-requeue under memory
         pressure (_ensure_room)."""
+        finished = self._step_once()
+        self.step_no += 1
+        return finished
+
+    def _step_once(self) -> List[Request]:
         finished = self._admit()
         self._note_kv_peak()
-        if self.kv_mode == "paged":
+        if self._pending:
+            finished.extend(self._advance_pendings())
+        stalled = not self.interleave and bool(self._pending)
+        if self.kv_mode == "paged" and not stalled:
             finished.extend(self._ensure_room(
                 1 if self.spec is None else self.spec.k + 1))
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and i not in self._pending]
         if not active:
+            return finished
+        if stalled:
+            self.stats["stall_ticks"] += 1
             return finished
         if self.spec is not None:
             finished.extend(self._spec_step(active))

@@ -83,6 +83,8 @@ class PipelineStats:
     engine_replicas: int = 0     # 1 = single engine, N = EngineCluster
     engine_kv_mode: str = ""     # "dense" | "paged" KV-cache manager
     engine_spec_k: int = 0       # draft tokens/round (0 = spec off)
+    engine_prefill_budget: int = 0   # chunked-prefill tokens/step (0 = off)
+    engine_admission: str = ""   # "fifo" | "slack" admission order
 
     # tool-graph compiler (cross-session fused execution)
     fused_batches: int = 0       # batched execute_graph_batch calls
@@ -103,6 +105,8 @@ class PipelineStats:
                 "engine_replicas": self.engine_replicas,
                 "engine_kv_mode": self.engine_kv_mode,
                 "engine_spec_k": self.engine_spec_k,
+                "engine_prefill_budget": self.engine_prefill_budget,
+                "engine_admission": self.engine_admission,
                 "fused_batches": self.fused_batches,
                 "fused_calls": self.fused_calls,
                 "fused_sessions_peak": self.fused_sessions_peak,
@@ -135,6 +139,12 @@ class GeckOptPipeline:
                 getattr(engine, "replicas", ())) or 1
             self.stats.engine_kv_mode = getattr(engine, "kv_mode", "")
             self.stats.engine_spec_k = getattr(engine, "spec_k", 0)
+            # scheduling knobs live on the engine; a cluster's replicas
+            # are homogeneous, so replica 0 speaks for the fleet
+            e0 = (getattr(engine, "replicas", None) or [engine])[0]
+            self.stats.engine_prefill_budget = \
+                getattr(e0, "prefill_budget", None) or 0
+            self.stats.engine_admission = getattr(e0, "admission", "")
         self._engine_sessions = []
 
     # ---------------------------------------------------------- stages ----

@@ -118,6 +118,13 @@ class WorkloadConfig:
     temperature: float = 0.0
     sla_ticks: int = 64
     use_prefix: bool = True      # tag requests with the intent prefix key
+    # long-prompt tail (the stall-free-scheduling bench's bursty mixed
+    # workload): each session is long with probability long_frac, and a
+    # long session pads every turn's prompt with ~long_words extra
+    # words (~1 token each). 0.0 keeps the rng stream — and therefore
+    # every existing workload — bit-identical.
+    long_frac: float = 0.0
+    long_words: int = 128
 
 
 def _arrival_schedule(cfg: WorkloadConfig, rng: np.random.Generator,
@@ -152,10 +159,20 @@ def make_workload(cfg: WorkloadConfig) -> List[WorkloadRequest]:
         n_turns = (1 if cfg.max_turns <= 1
                    else 1 + int(rng.integers(0, cfg.max_turns)))
         place = _PLACES[int(rng.integers(0, len(_PLACES)))]
+        # draw the long flag ONLY when the tail is enabled: long_frac=0
+        # consumes no rng, so pre-existing workloads stay bit-identical
+        long = (cfg.long_frac > 0.0
+                and float(rng.random()) < cfg.long_frac)
         prefix = intent_prefix(intent)
         for turn in range(n_turns):
             idx = len(out)
             query = _QUERY_TEMPLATES[intent].format(place=place)
+            if long:
+                # ~1 token per short word; fixed filler keeps prompt
+                # lengths per-(intent, long) constant so the engine's
+                # jit stays warm across sessions
+                query += " context " + " ".join(
+                    ["item"] * max(cfg.long_words - 1, 0))
             prompt = (f"{prefix} Session {sid:03d} turn {turn} "
                       f"request {idx:04d}: {query}")
             out.append(WorkloadRequest(

@@ -3,10 +3,8 @@
 The cluster layer (serving/cluster.py) multiplies every engine bug by N
 replicas, so the core scheduling invariants get their own test layer:
 slot recycling, finish-reason classification, admission accounting,
-deque queue semantics and bit-reproducibility.
+admission-queue semantics and bit-reproducibility.
 """
-from collections import deque
-
 import jax
 import jax.numpy as jnp
 import pytest
@@ -15,6 +13,7 @@ from repro.configs import get_smoke_config
 from repro.models.model import init_params
 from repro.serving.engine import InferenceEngine
 from repro.serving.sampling import SamplerConfig
+from repro.serving.sched import AdmissionQueue
 from repro.serving.tokenizer import SPECIALS
 
 
@@ -48,10 +47,11 @@ def make_engine(planner, base=None, **kw):
 # ------------------------------------------------------ queue semantics ----
 
 def test_queue_is_deque_with_fifo_admission(planner, base_engine):
-    """The O(n) list.pop(0) queue is gone: admission pops the deque head
-    in arrival order."""
+    """The O(n) list.pop(0) queue is gone: the default fifo
+    AdmissionQueue pops in arrival order (and iterates in pop order)."""
     eng = make_engine(planner, base_engine)
-    assert isinstance(eng.queue, deque)
+    assert isinstance(eng.queue, AdmissionQueue)
+    assert eng.queue.policy == "fifo"
     rids = [eng.add_request(f"queued request number {i}",
                             max_new_tokens=6) for i in range(5)]
     eng.step()               # admits exactly max_batch=2, FIFO

@@ -1,0 +1,403 @@
+"""Stall-free scheduling: chunked-prefill/decode interleaving, SLA-aware
+admission and the latency accounting that measures them.
+
+The tentpole invariant is BITWISE token parity: splitting an admission
+prefill into budgeted attn_chunk-aligned pieces — at any budget, under
+either admission policy, interleaved with decode or run to completion,
+on dense or paged KV, with or without speculative decode — must not
+change a single generated token vs the monolithic admission path. The
+chunk-seam parity of ``prefill_extend`` (DESIGN.md §Prefix caching)
+plus slot-independent decode math and per-request sampler seeds carry
+the argument; these tests enforce it at every chunk-boundary shape.
+
+Prompts are explicit id lists. The module pins ``attn_chunk=8`` so a
+few-dozen-token prompt spans several chunks; monolithic-prefill
+baselines only see chunk-aligned (or single-chunk) prompt lengths —
+the legacy prefill path asserts ``Sq % attn_chunk == 0`` above one
+chunk, which is exactly why the budgeted path exists.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.common.perf import get_flags, set_flags
+from repro.configs import get_smoke_config
+from repro.models.model import init_params
+from repro.serving.engine import InferenceEngine, Request
+from repro.serving.sampling import SamplerConfig
+from repro.serving.sched import (NO_DEADLINE, AdmissionQueue,
+                                 deadline_step, victim_key)
+
+CHUNK = 8                     # attn_chunk pinned for this module
+BS = 16                       # paged block size; cache_len = 128
+
+
+@pytest.fixture(scope="module", autouse=True)
+def small_chunks():
+    """Pin attn_chunk=8 so short prompts exercise multi-chunk prefill;
+    restore the session flags afterwards."""
+    saved = get_flags()
+    set_flags(dataclasses.replace(saved, attn_chunk=CHUNK))
+    yield
+    set_flags(saved)
+
+
+@pytest.fixture(scope="module")
+def planner():
+    cfg = get_smoke_config("planner-proxy-100m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def base_engine(planner):
+    """Compile the jitted steps once for cache_len=128."""
+    cfg, params = planner
+    return InferenceEngine(cfg, params, max_batch=2, cache_len=128)
+
+
+def make_engine(planner, base=None, **kw):
+    cfg, params = planner
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("cache_len", 128)
+    eng = InferenceEngine(cfg, params, **kw)
+    if base is not None and kw["cache_len"] == base.cache_len:
+        eng._prefill, eng._decode, eng._extend = \
+            base._prefill, base._decode, base._extend
+    return eng
+
+
+# chunk-aligned / single-chunk lengths: legal for the monolithic
+# baseline AND every chunk-boundary case of the budgeted path —
+# 1 chunk exact, < 1 chunk, multi-chunk exact, odd short
+ALIGNED_LENS = (8, 5, 24, 16, 40)
+# non-aligned lengths (chunks + remainder): budgeted paths only
+RAGGED_LENS = (23, 9, 33, 17, 37)
+
+
+def _submit(eng, lens, max_new=6, sla=None):
+    for i, n in enumerate(lens):
+        eng.add_request(list(range(5, 5 + n)), max_new_tokens=max_new,
+                        sampler=SamplerConfig(temperature=0.8,
+                                              top_k=40, seed=900 + i),
+                        sla_ticks=None if sla is None else sla[i])
+
+
+def _outputs(eng, lens, **kw):
+    _submit(eng, lens, **kw)
+    return {r.request_id: (tuple(r.output), r.finish_reason)
+            for r in eng.run_until_done()}
+
+
+# --------------------------------------------------- chunk-seam parity ----
+
+def test_budget_parity_vs_monolithic_all_boundaries(planner,
+                                                    base_engine):
+    """Budgets of exactly one chunk, two chunks, and below one chunk
+    (whole-chunk fallback) all emit the monolithic path's tokens,
+    interleaved or run-to-completion."""
+    ref = _outputs(make_engine(planner, base_engine), ALIGNED_LENS)
+    for budget in (CHUNK, 2 * CHUNK, CHUNK - 5):
+        for interleave in (True, False):
+            eng = make_engine(planner, base_engine,
+                              prefill_budget=budget,
+                              interleave=interleave)
+            assert _outputs(eng, ALIGNED_LENS) == ref, \
+                (budget, interleave)
+            assert eng.stats["prefill_chunks"] > 0
+
+
+def test_budget_parity_ragged_dense_paged_slack(planner, base_engine):
+    """Non-chunk-aligned prompts (the lengths the monolithic prefill
+    cannot even serve above one chunk): dense and paged engines, both
+    schedules, fifo and slack admission — one identical answer."""
+    ref = None
+    for kv in ({}, {"kv_mode": "paged", "block_size": BS}):
+        for interleave in (True, False):
+            for admission in ("fifo", "slack"):
+                eng = make_engine(planner, base_engine,
+                                  prefill_budget=CHUNK,
+                                  interleave=interleave,
+                                  admission=admission, **kv)
+                out = _outputs(eng, RAGGED_LENS)
+                ref = ref or out
+                assert out == ref, (kv, interleave, admission)
+
+
+def test_budget_parity_with_prefix_hits(planner, base_engine):
+    """A prefix hit seeds the pending prefill mid-prompt; the resumed
+    chunk stream still matches the monolithic prefix path, and the
+    admission accounting invariant carries over."""
+    prefix = list(range(5, 29))                 # 24 tokens = 3 chunks
+
+    def run(**kw):
+        eng = make_engine(planner, base_engine, **kw)
+        eng.register_prefix("p", prefix)
+        for i, extra in enumerate((3, 11, 8)):
+            eng.add_request(prefix + list(range(60, 60 + extra)),
+                            max_new_tokens=5, prefix_key="p",
+                            sampler=SamplerConfig(temperature=0.8,
+                                                  seed=70 + i))
+        out = {r.request_id: tuple(r.output)
+               for r in eng.run_until_done()}
+        return out, eng.stats
+
+    ref, _ = run()
+    for kw in ({"prefill_budget": CHUNK},
+               {"prefill_budget": CHUNK, "interleave": False},
+               {"prefill_budget": CHUNK, "kv_mode": "paged",
+                "block_size": BS}):
+        out, st = run(**kw)
+        assert out == ref, kw
+        assert st["prefix_hits"] == 3
+        assert st["admissions"] == st["prefix_hits"] + st["prefills"] \
+            - st["prefix_registrations"]
+
+
+def test_budget_parity_with_spec_decode(planner):
+    """Chunked admission hands off into speculative decoding without
+    changing a token: the pending slot rides through draft rounds
+    untouched until its cache installs. (Aligned prompt lengths: the
+    non-budget reference admits through the monolithic prefill.)"""
+    from repro.serving.specdec import SpecConfig
+    cfg, params = planner
+
+    def run(**kw):
+        eng = InferenceEngine(cfg, params, max_batch=2, cache_len=128,
+                              spec_decode=SpecConfig(draft_cfg=cfg,
+                                                     draft_params=params,
+                                                     k=3), **kw)
+        return _outputs(eng, ALIGNED_LENS, max_new=8)
+
+    ref = run()
+    out = run(prefill_budget=CHUNK)
+    assert out == ref
+    assert run(prefill_budget=CHUNK, interleave=False) == ref
+
+
+def test_budget_parity_through_paged_preemption(planner, base_engine):
+    """A pool too small for the batch forces preempt-and-resume around
+    in-flight chunked prefills; the swap round-trip plus the chunk
+    seams change nothing vs the dense budgeted engine."""
+    def run(kv_mode, **kw):
+        eng = make_engine(planner, base_engine, kv_mode=kv_mode,
+                          prefill_budget=CHUNK, **kw)
+        for i in range(3):
+            eng.add_request(list(range(5, 45)), max_new_tokens=24,
+                            sampler=SamplerConfig(temperature=0.8,
+                                                  top_k=40,
+                                                  seed=77 + i))
+        return ({r.request_id: tuple(r.output)
+                 for r in eng.run_until_done()}, eng)
+
+    d, _ = run("dense")
+    p, eng = run("paged", block_size=BS, kv_blocks=7)
+    assert eng.stats["preemptions"] > 0
+    assert eng.stats["resumes"] == eng.stats["preemptions"]
+    assert d == p
+
+
+def test_oversize_prompt_refused_up_front(planner, base_engine):
+    """Budget mode screens prompts >= cache_len at admission (like
+    paged/spec modes) instead of crashing mid-chunk."""
+    eng = make_engine(planner, base_engine, prefill_budget=CHUNK)
+    eng.add_request(list(range(5, 140)), max_new_tokens=4)  # 135 >= 128
+    eng.add_request(list(range(5, 30)), max_new_tokens=4)
+    done = {r.request_id: r for r in eng.run_until_done()}
+    assert done[0].finish_reason == "cache_len" and not done[0].output
+    assert len(done[1].output) == 4
+
+
+def test_budget_validation(planner, base_engine):
+    with pytest.raises(ValueError, match="prefill_budget"):
+        make_engine(planner, base_engine, prefill_budget=0)
+
+
+# ------------------------------------------------ scheduling semantics ----
+
+def test_rtc_stalls_interleave_does_not(planner, base_engine):
+    """Run-to-completion pays stall ticks (decode frozen while a
+    prefill drains) and a longer makespan; interleaving serves the
+    same requests in fewer steps with zero stalls — same tokens."""
+    lens = (40, 5, 24, 9)
+
+    def run(interleave):
+        eng = make_engine(planner, base_engine, prefill_budget=CHUNK,
+                          interleave=interleave)
+        out = _outputs(eng, lens, max_new=8)
+        return out, eng.stats["stall_ticks"], eng.step_no
+
+    out_i, stalls_i, steps_i = run(True)
+    out_r, stalls_r, steps_r = run(False)
+    assert out_i == out_r
+    assert stalls_i == 0
+    assert stalls_r > 0
+    assert steps_r > steps_i
+
+
+def test_pending_round_robin_lets_short_pass_long(planner, base_engine):
+    """Deficit round-robin over pendings: a 1-chunk prompt admitted
+    beside a 5-chunk prompt drains within a couple of turns instead of
+    queuing behind the whole long prefill — its first token lands
+    strictly earlier than the long prompt's."""
+    eng = make_engine(planner, base_engine, prefill_budget=CHUNK)
+    eng.add_request(list(range(5, 45)), max_new_tokens=4,   # 5 chunks
+                    sampler=SamplerConfig(temperature=0.0))
+    eng.add_request(list(range(50, 58)), max_new_tokens=4,  # 1 chunk
+                    sampler=SamplerConfig(temperature=0.0))
+    done = {r.request_id: r for r in eng.run_until_done()}
+    long_req, short_req = done[0], done[1]
+    assert short_req.first_token_step < long_req.first_token_step
+    # both admitted on step 0; the short one's single chunk lands on
+    # its round-robin turn (step 1), not after the long drain
+    assert short_req.admit_step == long_req.admit_step == 0
+    assert short_req.first_token_step <= 2
+
+
+def test_tick_stamps_are_monotonic(planner, base_engine):
+    """enqueue <= admit <= first_token <= finish on every request, and
+    first_token_step is when the FIRST output token appeared — the
+    quantity the cluster's true-TTFT metric is derived from."""
+    eng = make_engine(planner, base_engine, prefill_budget=CHUNK)
+    _submit(eng, (24, 9, 16, 5), max_new=5)
+    done = eng.run_until_done()
+    assert len(done) == 4
+    for r in done:
+        assert 0 <= r.enqueue_step <= r.admit_step \
+            <= r.first_token_step <= r.finish_step
+    # with 2 slots, the later requests were queued: enqueue < admit
+    assert any(r.enqueue_step < r.admit_step for r in done)
+
+
+# -------------------------------------------------- SLA-aware admission ----
+
+def _req(rid, sla=None, enq=0, out=()):
+    r = Request(request_id=rid, prompt=[1, 2], max_new_tokens=4,
+                sampler=SamplerConfig(), sla_ticks=sla)
+    r.enqueue_step = enq
+    r.output = list(out)
+    return r
+
+
+def test_admission_queue_fifo_and_slack_orders():
+    """fifo pops arrival order; slack pops earliest deadline first
+    (enqueue_step + sla_ticks, ties by request id, no-SLA last) —
+    and iteration previews pop order without mutating."""
+    reqs = [_req(0, sla=None), _req(1, sla=50), _req(2, sla=10),
+            _req(3, sla=10, enq=5)]
+    fifo = AdmissionQueue("fifo")
+    slack = AdmissionQueue("slack")
+    for r in reqs:
+        fifo.push(r)
+        slack.push(r)
+    assert [r.request_id for r in fifo] == [0, 1, 2, 3]
+    assert [r.request_id for r in slack] == [2, 3, 1, 0]
+    assert [r.request_id for r in slack] == [2, 3, 1, 0]  # non-mutating
+    assert [slack.pop().request_id for _ in range(4)] == [2, 3, 1, 0]
+    # a preempted request re-queues at the FRONT under fifo
+    fifo.push(reqs[2]); fifo.push(reqs[1], front=True)
+    assert fifo.peek().request_id == 1
+    assert deadline_step(reqs[0]) == NO_DEADLINE
+    assert deadline_step(reqs[3]) == 15
+
+
+def test_victim_key_policies():
+    """fifo preempts the latest-admitted victim (seed rule); slack
+    preempts the laxest deadline — a no-SLA request before any
+    deadline-carrying one."""
+    a, b, c = _req(5, sla=10), _req(7, sla=99), _req(6, sla=None)
+    pool = [a, b, c]
+    assert max(pool, key=lambda r: victim_key(r, "fifo")) is b
+    assert max(pool, key=lambda r: victim_key(r, "slack")) is c
+
+
+def test_slack_admission_is_deterministic_edf(planner, base_engine):
+    """Same arrivals => same admission order, and that order is EDF:
+    with one slot, the tightest-deadline request is served first even
+    though it enqueued last."""
+    def run():
+        eng = make_engine(planner, base_engine, max_batch=1,
+                          admission="slack")
+        _submit(eng, (16, 16, 16), max_new=3, sla=(200, 100, 50))
+        done = eng.run_until_done()
+        return [r.request_id for r in
+                sorted(done, key=lambda r: r.admit_step)]
+
+    assert run() == [2, 1, 0]
+    assert run() == run()
+
+
+def test_expired_queued_requests_drop_deterministically(planner,
+                                                        base_engine):
+    """A request whose deadline passes while it is still QUEUED is
+    dropped at pop time with finish_reason='sla_expired' and no
+    tokens; requests that got a slot serve to completion."""
+    eng = make_engine(planner, base_engine, max_batch=1)
+    _submit(eng, (16, 16, 16), max_new=8, sla=(None, 2, 500))
+    done = {r.request_id: r for r in eng.run_until_done()}
+    assert len(done) == 3
+    assert done[1].finish_reason == "sla_expired"
+    assert done[1].output == []
+    # no 0/None sentinel left for TTFT math: a served-nothing drop
+    # stamps first_token == finish
+    assert done[1].first_token_step == done[1].finish_step
+    assert done[0].finish_reason in ("eos", "max_new_tokens")
+    assert done[2].finish_reason in ("eos", "max_new_tokens")
+    assert eng.stats["sla_expired"] == 1
+    assert eng.stats["admissions"] == 2
+
+
+def test_preempted_requests_never_expire(planner, base_engine):
+    """Expiry applies to FRESH queued requests only: a preempted
+    request already holds generated tokens and always resumes, even
+    past its deadline (dropping it would lose emitted output)."""
+    eng = make_engine(planner, base_engine, kv_mode="paged",
+                      block_size=BS, kv_blocks=7, prefill_budget=CHUNK)
+    for i in range(3):
+        eng.add_request(list(range(5, 45)), max_new_tokens=24,
+                        sla_ticks=3,
+                        sampler=SamplerConfig(temperature=0.8,
+                                              top_k=40, seed=77 + i))
+    done = {r.request_id: r for r in eng.run_until_done()}
+    assert eng.stats["preemptions"] > 0
+    # every preempted-and-resumed request finished with its tokens
+    resumed = [r for r in done.values()
+               if r.finish_reason != "sla_expired"]
+    assert all(len(r.output) == 24 or r.finish_reason == "eos"
+               for r in resumed)
+    assert eng.stats["resumes"] == eng.stats["preemptions"]
+
+
+# ------------------------------------------------- latency accounting ----
+
+def test_pct_empty_series_is_none():
+    from repro.serving.cluster import _pct
+    assert _pct([], 95) is None
+    assert _pct([3.0], 50) == 3.0
+
+
+def test_cluster_true_ttft_vs_admit_wait(planner):
+    """The cluster's ttft_* percentiles come from first_token_tick
+    (true TTFT); admit_wait_* keeps the old queue-exit proxy. A
+    budgeted multi-chunk admission makes them visibly different:
+    first_token_tick > admit_tick for the long prompt."""
+    from repro.serving.cluster import ClusterStats, EngineCluster
+    cfg, params = planner
+    cluster = EngineCluster(cfg, params, 1, max_batch=2, cache_len=128,
+                            prefill_budget=CHUNK)
+    eng = cluster.replicas[0]
+    r, rid = cluster.submit(list(range(5, 45)), max_new_tokens=4,
+                            sampler=SamplerConfig(temperature=0.0))
+    cluster.run_until_done()
+    t = cluster.traces[(r, rid)]
+    assert t.first_token_tick is not None
+    # 40-token prompt = 5 chunks at one chunk/step: admitted tick 0,
+    # first token only once the last chunk lands
+    assert t.admit_tick == 0
+    assert t.first_token_tick >= t.admit_tick + 4
+    assert eng.stats["prefill_chunks"] == 5
+    s = ClusterStats(ticks=cluster.tick,
+                     traces=list(cluster.traces.values()),
+                     per_replica=[dict(eng.stats)]).summary()
+    assert s["ttft_p50"] >= s["admit_wait_p50"] + 4
