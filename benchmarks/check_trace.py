@@ -1,0 +1,75 @@
+"""CI gate for the traced cluster bench: validate the Chrome trace
+artifact (schema + lifecycle coverage) and, optionally, the bench's
+``trace`` meta block (determinism/overhead assertions re-checked from
+the JSON the bench wrote, so a silently-skipped assertion still fails
+the job).
+
+  PYTHONPATH=src python benchmarks/check_trace.py TRACE_JSON [BENCH_JSON]
+
+Exit 0 = valid; every problem is printed to stderr.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+# the bench meta flags that must all be True (cluster_bench.bench_trace
+# hard-asserts them; re-checking here catches a stale/foreign JSON)
+META_FLAGS = ("tokens_equal_tracer_on_off", "ticks_equal_tracer_on_off",
+              "trace_byte_identical", "trace_export_valid")
+
+# lifecycle events any served workload must have emitted
+REQUIRED_EVENTS = ("enqueue", "admit", "first_token")
+
+
+def check_trace(trace_path: str, bench_path: str = "") -> list:
+    from repro.obs.export import load_and_validate
+    doc, errors = load_and_validate(trace_path)
+    events = doc.get("traceEvents", []) if isinstance(doc, dict) else []
+    real = [e for e in events if isinstance(e, dict)
+            and e.get("ph") != "M"]
+    if not real:
+        errors.append("trace has no events beyond metadata")
+    names = {e.get("name") for e in real}
+    for required in REQUIRED_EVENTS:
+        if required not in names:
+            errors.append(f"lifecycle event {required!r} missing "
+                          f"from the trace")
+    spans = [e for e in real if e.get("ph") == "B"]
+    if not spans:
+        errors.append("trace has no request spans (no B records)")
+    if bench_path:
+        with open(bench_path) as f:
+            meta = json.load(f).get("trace")
+        if not isinstance(meta, dict):
+            errors.append(f"{bench_path} has no 'trace' meta block")
+        else:
+            for key in META_FLAGS:
+                if meta.get(key) is not True:
+                    errors.append(f"bench trace meta {key} is "
+                                  f"{meta.get(key)!r}, expected true")
+            if meta.get("trace_records", 0) != len(real):
+                errors.append(
+                    f"record count drifted: bench meta says "
+                    f"{meta.get('trace_records')}, trace file has "
+                    f"{len(real)}")
+    return errors
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not 1 <= len(argv) <= 2:
+        print("usage: check_trace.py TRACE_JSON [BENCH_JSON]",
+              file=sys.stderr)
+        return 2
+    errors = check_trace(*argv)
+    for e in errors:
+        print(f"check_trace: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print(f"check_trace: OK ({argv[0]})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

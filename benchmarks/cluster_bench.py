@@ -254,7 +254,90 @@ def bench_interleave(n_replicas: int = 2, n_sessions: int = 24,
     return rows, meta
 
 
-def write_results(rows, meta, irows, imeta):
+def bench_trace(n_replicas: int = 2, n_sessions: int = 8, seed: int = 0,
+                max_batch: int = 2, cache_len: int = 192,
+                trace_out: str = ""):
+    """Traced tiny cluster bench: one fixed-seed workload served (a)
+    under the NullTracer default and (b) twice under a recording
+    Tracer. Hard-asserts the observability contracts end-to-end:
+
+      * zero perturbation — tracing changes neither the generated
+        tokens nor the tick count, so tokens/tick is EXACTLY equal
+        tracer-on vs tracer-off (not within a tolerance);
+      * determinism — same seed => byte-identical serialized Chrome
+        trace across the two traced runs;
+      * schema — the export passes ``validate_chrome_trace``.
+
+    ``trace_out`` additionally writes run (b)'s trace for the CI
+    artifact + ``benchmarks/check_trace.py``."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models.model import init_params
+    from repro.obs import NULL_TRACER, Tracer
+    from repro.obs.export import (chrome_trace, validate_chrome_trace,
+                                  write_trace)
+    from repro.serving.cluster import EngineCluster
+    from repro.serving.workload import (WorkloadConfig, make_workload,
+                                        register_workload_prefixes,
+                                        skewed_mix)
+
+    cfg = get_smoke_config("planner-proxy-100m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    wcfg = WorkloadConfig(n_sessions=n_sessions, seed=seed,
+                          intent_mix=skewed_mix(hot_frac=0.7),
+                          profile="poisson", inter_arrival=1.0,
+                          max_turns=2, max_new_tokens=4,
+                          temperature=0.8)
+    requests = make_workload(wcfg)
+    pool = EngineCluster(cfg, params, n_replicas, max_batch=max_batch,
+                         cache_len=cache_len, seed=seed).replicas
+
+    def serve(tracer):
+        for e in pool:
+            e.reset()
+        cluster = EngineCluster(engines=pool, router="intent_affinity",
+                                tracer=tracer)
+        register_workload_prefixes(cluster, requests)
+        stats = cluster.run_workload(requests)
+        return stats.outputs(), stats.summary()
+
+    base_out, base_sum = serve(NULL_TRACER)
+    t1 = Tracer()
+    out1, sum1 = serve(t1)
+    t2 = Tracer()
+    out2, _ = serve(t2)
+    dumps = lambda t: json.dumps(chrome_trace(t), sort_keys=True,
+                                 separators=(",", ":"))
+    errors = validate_chrome_trace(chrome_trace(t1))
+    meta = {
+        "n_replicas": n_replicas, "max_batch": max_batch,
+        "requests": len(requests), "seed": seed,
+        "trace_records": len(t1.records),
+        "ticks": sum1["ticks"],
+        "tok_per_tick_untraced": round(
+            base_sum["tokens_out"] / max(base_sum["ticks"], 1), 4),
+        "tok_per_tick_traced": round(
+            sum1["tokens_out"] / max(sum1["ticks"], 1), 4),
+        "tokens_equal_tracer_on_off": out1 == base_out,
+        "ticks_equal_tracer_on_off": sum1["ticks"] == base_sum["ticks"],
+        "trace_byte_identical": dumps(t1) == dumps(t2) and out1 == out2,
+        "trace_export_valid": errors == [],
+    }
+    assert meta["tokens_equal_tracer_on_off"], \
+        "tracing changed generated tokens"
+    assert meta["ticks_equal_tracer_on_off"], \
+        (f"tracing changed tokens/tick: {sum1['ticks']} ticks traced "
+         f"vs {base_sum['ticks']} untraced")
+    assert meta["trace_byte_identical"], \
+        "same-seed traces are not byte-identical"
+    assert meta["trace_export_valid"], errors
+    if trace_out:
+        write_trace(t1, trace_out)
+        meta["trace_out"] = os.path.basename(trace_out)
+    return meta
+
+
+def write_results(rows, meta, irows, imeta, tmeta):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     md = ["# cluster_bench — router policies on the intent-affinity "
           "serving cluster", "",
@@ -314,12 +397,28 @@ def write_results(rows, meta, irows, imeta):
            "running beside it: the tail collapses while throughput "
            "and every generated token stay identical (true TTFT is "
            "first_token_tick - arrival_tick + 1; `admit_wait_p95` is "
-           "the old queue-exit proxy, kept for comparison)."]
+           "the old queue-exit proxy, kept for comparison).",
+           "",
+           "## Request-lifecycle tracing — overhead and determinism",
+           "",
+           f"{tmeta['n_replicas']} replicas, {tmeta['requests']} "
+           f"requests, {tmeta['trace_records']} trace records over "
+           f"{tmeta['ticks']} ticks.",
+           "",
+           f"- tokens/tick traced vs untraced: "
+           f"**{tmeta['tok_per_tick_traced']}** vs "
+           f"**{tmeta['tok_per_tick_untraced']}** (must be exactly "
+           f"equal: tracing never branches control flow)",
+           f"- same-seed trace byte-identical: "
+           f"**{tmeta['trace_byte_identical']}**",
+           f"- Chrome/Perfetto export validates: "
+           f"**{tmeta['trace_export_valid']}**"]
     with open(os.path.join(RESULTS_DIR, "cluster_bench.md"), "w") as f:
         f.write("\n".join(md) + "\n")
     with open(os.path.join(RESULTS_DIR, "cluster_bench.json"), "w") as f:
         json.dump({"meta": meta, "rows": rows,
-                   "interleave": {"meta": imeta, "rows": irows}},
+                   "interleave": {"meta": imeta, "rows": irows},
+                   "trace": tmeta},
                   f, indent=1)
 
 
@@ -329,18 +428,24 @@ def main(argv=None):
                     help="CI smoke config (fewer replicas/sessions)")
     ap.add_argument("--out", default=None,
                     help="write the JSON here instead of results/")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the traced run's Chrome trace JSON "
+                         "here (validated by benchmarks/check_trace.py;"
+                         " CI uploads it as an artifact)")
     args = ap.parse_args(argv)
     rows, meta = (bench(n_replicas=2, n_sessions=8, max_batch=2,
                         cache_len=128) if args.tiny else bench())
     irows, imeta = (bench_interleave(n_sessions=16)
                     if args.tiny else bench_interleave())
+    tmeta = bench_trace(trace_out=args.trace_out or "")
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"meta": meta, "rows": rows,
-                       "interleave": {"meta": imeta, "rows": irows}},
+                       "interleave": {"meta": imeta, "rows": irows},
+                       "trace": tmeta},
                       f, indent=1)
     elif not args.tiny:
-        write_results(rows, meta, irows, imeta)
+        write_results(rows, meta, irows, imeta, tmeta)
     for r in rows:
         print(f"{r['policy']:16s} hit={r['prefix_hit']:.3f} "
               f"ttft_p95={_fmt(r['ttft_p95'], '.0f')} qwait_p95="
@@ -359,7 +464,12 @@ def main(argv=None):
     print(f"interleave_ttft_p99_gain={imeta['interleave_ttft_p99_gain']}"
           f" tps_ratio={imeta['interleave_tps_ratio']}"
           f" tokens_identical={imeta['interleave_tokens_identical']}")
-    return rows, meta, irows, imeta
+    print(f"trace: {tmeta['trace_records']} records, tok/tick "
+          f"{tmeta['tok_per_tick_traced']} traced vs "
+          f"{tmeta['tok_per_tick_untraced']} untraced, "
+          f"byte_identical={tmeta['trace_byte_identical']} "
+          f"export_valid={tmeta['trace_export_valid']}")
+    return rows, meta, irows, imeta, tmeta
 
 
 if __name__ == "__main__":

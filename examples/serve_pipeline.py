@@ -79,6 +79,10 @@ def main():
                     choices=("fifo", "slack"),
                     help="admission-queue order: arrival or earliest "
                          "SLA deadline first")
+    ap.add_argument("--trace-out", default="",
+                    help="write the unified pipeline+engine trace here "
+                         "(.jsonl = record-per-line, anything else = "
+                         "Chrome trace-event JSON for Perfetto)")
     args = ap.parse_args()
     if args.spec_decode and args.draft_k < 1:
         ap.error(f"--spec-decode needs --draft-k >= 1, "
@@ -94,6 +98,10 @@ def main():
     spec = (SpecConfig(draft_cfg=cfg, draft_params=params,
                        k=args.draft_k)
             if args.spec_decode else None)
+    # one tracer spans the whole stack: gate/plan/execute waves land on
+    # the "pipeline" track, engine lifecycle events on per-slot tracks
+    from repro.obs import Tracer
+    tracer = Tracer() if args.trace_out else None
     # cache_len must hold the longest per-intent planner prefix (~2.5k
     # tokens of system prompt + catalog) plus the turn suffix
     if args.replicas > 1:
@@ -105,7 +113,8 @@ def main():
                                block_size=args.block_size,
                                spec_decode=spec,
                                prefill_budget=args.prefill_budget,
-                               admission=args.admission)
+                               admission=args.admission,
+                               tracer=tracer)
     else:
         engine = InferenceEngine(cfg, params, max_batch=4,
                                  cache_len=4096, backend=args.backend,
@@ -114,7 +123,8 @@ def main():
                                  block_size=args.block_size,
                                  spec_decode=spec,
                                  prefill_budget=args.prefill_budget,
-                                 admission=args.admission)
+                                 admission=args.admission,
+                                 tracer=tracer)
     classifier = BatchedNeuralIntentClassifier(cfg, params)
     print(f"planner engine up: {count_params_analytic(cfg)/1e6:.1f}M "
           f"params, {args.replicas} replica(s) x 4 slots; "
@@ -132,7 +142,7 @@ def main():
     # --- run everything through the concurrent pipeline ------------------
     pipe = GeckOptPipeline(
         agent, PipelineConfig(max_concurrent=args.concurrency),
-        engine=engine)
+        engine=engine, tracer=tracer)
     t0 = time.time()
     results = pipe.run(tasks)
     dt = time.time() - t0
@@ -143,8 +153,9 @@ def main():
     print(f"\n{len(results)} sessions in {dt:.2f}s "
           f"({len(results)/max(dt,1e-9):.2f} tasks/s, "
           f"{args.concurrency} concurrent)")
+    mgb = ps["mean_gate_batch"]          # None when no wave ran
     print(f"gate:    {ps['gate_batches']} batched calls, mean wave "
-          f"{ps['mean_gate_batch']:.1f} queries "
+          f"{'n/a' if mgb is None else f'{mgb:.1f}'} queries "
           f"(vs {8*len(results)} B=1 forwards sequentially)")
     print(f"engine:  {ps['engine_turns']} planner turns over "
           f"{len(engine.prefixes)} intent prefixes — "
@@ -173,6 +184,11 @@ def main():
     print("(gate params are random-init here, so fallback is high — "
           "examples/train_planner.py fine-tunes the proxy into an "
           "accurate gate)")
+    if tracer is not None:
+        from repro.obs.export import write_trace
+        write_trace(tracer, args.trace_out)
+        print(f"trace: {len(tracer.records)} records -> "
+              f"{args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,9 @@
-"""RL101–RL105: determinism lint.
+"""RL101–RL106: determinism lint.
 
 The serving stack's headline claims — bitwise-identical replays, tick
 clocks, seeded rng everywhere — are conventions, not types. This pass
 makes them machine-checked in the deterministic directories (``core/``,
-``serving/``, ``env/``, ``kernels/``; ``benchmarks/`` and ``launch/``
+``serving/``, ``env/``, ``kernels/``; ``benchmarks/`` and tests
 legitimately read wall-clock and are out of scope by default):
 
   * RL101 — wall-clock reads: ``time.time/monotonic/perf_counter/
@@ -21,6 +21,17 @@ legitimately read wall-clock and are out of scope by default):
   * RL105 — float-keyed dict literals/comprehensions: float key
     identity is representation-fragile (``0.1 + 0.2`` lookups, JSON
     round-trips stringify keys).
+  * RL106 — the *boundary* rule for every other ``src/repro`` package
+    (``common``, ``configs``, ``models``, ``distributed``,
+    ``training``, ``analysis``): wall-clock reads are only legal
+    behind an injected ``clock=`` callable (the engine/tracer
+    convention — ``InferenceEngine(clock=...)``,
+    ``Tracer.bind_clock``). Direct ``time.*``/``datetime.now``-family
+    reads are flagged; the full RL102–RL105 battery is not, those
+    packages may legitimately read env vars etc. Only
+    ``src/repro/obs/`` and ``src/repro/launch/`` (the clock
+    *providers*) may touch the wall clock directly — see
+    :data:`CLOCK_ALLOWLIST` / :func:`wallclock_scope`.
 
 Purely syntactic (AST) — no imports of the analyzed code.
 """
@@ -36,6 +47,31 @@ _WALLCLOCK_TIME = {"time", "monotonic", "perf_counter", "time_ns",
                    "monotonic_ns", "perf_counter_ns"}
 _WALLCLOCK_DT = {"now", "utcnow", "today"}
 _ORDERED_SINKS = {"list", "tuple", "enumerate"}
+
+#: packages under the full RL101–RL105 battery
+FULL_LINT_DIRS = ("src/repro/core/", "src/repro/serving/",
+                  "src/repro/env/", "src/repro/kernels/")
+#: the only packages allowed to read the wall clock directly: obs/
+#: binds injected clocks to traces, launch/ is the process entry that
+#: *supplies* ``time.time`` to everything else
+CLOCK_ALLOWLIST = ("src/repro/obs/", "src/repro/launch/")
+
+
+def wallclock_scope(rel: str) -> str:
+    """Which determinism lint applies to a repo-relative path:
+
+    * ``"full"``     — RL101–RL105 (deterministic core dirs, and any
+      path outside ``src/repro`` such as the fixture corpora);
+    * ``"allow"``    — no determinism lint (the clock providers);
+    * ``"boundary"`` — RL106 only (remaining ``src/repro`` packages).
+    """
+    rel = rel.replace("\\", "/")
+    if any(rel.startswith(p) for p in CLOCK_ALLOWLIST):
+        return "allow"
+    if any(rel.startswith(p) for p in FULL_LINT_DIRS) \
+            or not rel.startswith("src/repro/"):
+        return "full"
+    return "boundary"
 
 
 def _dotted(node: ast.AST) -> str:
@@ -60,27 +96,48 @@ def _is_set_expr(node: ast.AST) -> bool:
 
 
 class _Lint(ast.NodeVisitor):
-    def __init__(self, path: Path):
+    """``clock_only=True`` is the RL106 boundary mode: the same
+    wall-clock detection, emitted under ``clock_rule``, with every
+    other rule (RL102–RL105) switched off."""
+
+    def __init__(self, path: Path, *, clock_rule: str = "RL101",
+                 clock_only: bool = False):
         self.path = path
+        self.clock_rule = clock_rule
+        self.clock_only = clock_only
         self.findings: List[Finding] = []
 
     def _add(self, rule: str, line: int, message: str, hint: str) -> None:
         self.findings.append(make_finding(rule, self.path, line,
                                           message, hint))
 
-    # ------------------------------------------------------ RL101-103 ----
+    def _add_clock(self, line: int, dotted: str, full_hint: str) -> None:
+        if self.clock_rule == "RL106":
+            self._add("RL106", line,
+                      f"wall-clock read {dotted}() outside the "
+                      f"injected-clock boundary",
+                      "accept an injected clock= callable (the "
+                      "engine/tracer convention); only src/repro/obs/ "
+                      "and src/repro/launch/ read the wall clock "
+                      "directly")
+        else:
+            self._add("RL101", line, f"wall-clock read {dotted}()",
+                      full_hint)
+
+    # ------------------------------------------------ RL101/RL106-103 ----
     def visit_Call(self, node: ast.Call) -> None:
         dotted = _dotted(node.func)
         head, _, tail = dotted.rpartition(".")
         if head in ("time",) and tail in _WALLCLOCK_TIME:
-            self._add("RL101", node.lineno,
-                      f"wall-clock read {dotted}()",
-                      "inject a clock / use the tick counter; "
-                      "wall-clock belongs in launch/ and benchmarks/")
+            self._add_clock(node.lineno, dotted,
+                            "inject a clock / use the tick counter; "
+                            "wall-clock belongs in launch/ and "
+                            "benchmarks/")
         elif tail in _WALLCLOCK_DT and head.split(".")[-1] == "datetime":
-            self._add("RL101", node.lineno,
-                      f"wall-clock read {dotted}()",
-                      "pass timestamps in explicitly")
+            self._add_clock(node.lineno, dotted,
+                            "pass timestamps in explicitly")
+        elif self.clock_only:
+            pass                 # boundary scope: clock reads only
         elif dotted in ("os.getenv",) or (
                 head == "os.environ" and tail == "get"):
             self._add("RL103", node.lineno,
@@ -93,14 +150,14 @@ class _Lint(ast.NodeVisitor):
                       "use a seeded np.random.Generator or jax.random "
                       "key threaded from the caller")
         # ordered sinks over raw set expressions
-        if isinstance(node.func, ast.Name) \
+        if not self.clock_only and isinstance(node.func, ast.Name) \
                 and node.func.id in _ORDERED_SINKS and node.args \
                 and _is_set_expr(node.args[0]):
             self._add("RL104", node.lineno,
                       f"{node.func.id}() over an unordered set "
                       f"expression",
                       "wrap the set in sorted(...)")
-        if isinstance(node.func, ast.Attribute) \
+        if not self.clock_only and isinstance(node.func, ast.Attribute) \
                 and node.func.attr == "join" and node.args \
                 and _is_set_expr(node.args[0]):
             self._add("RL104", node.lineno,
@@ -109,7 +166,7 @@ class _Lint(ast.NodeVisitor):
         self.generic_visit(node)
 
     def visit_Subscript(self, node: ast.Subscript) -> None:
-        if _dotted(node.value) == "os.environ" \
+        if not self.clock_only and _dotted(node.value) == "os.environ" \
                 and isinstance(node.ctx, ast.Load):
             self._add("RL103", node.lineno, "os.environ[...] read",
                       "thread configuration through explicit config")
@@ -117,21 +174,21 @@ class _Lint(ast.NodeVisitor):
 
     def visit_Import(self, node: ast.Import) -> None:
         for alias in node.names:
-            if alias.name == "random":
+            if not self.clock_only and alias.name == "random":
                 self._add("RL102", node.lineno, "import random",
                           "stdlib random is a process-global stream; "
                           "use seeded generators")
         self.generic_visit(node)
 
     def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
-        if node.module == "random":
+        if not self.clock_only and node.module == "random":
             self._add("RL102", node.lineno, "from random import ...",
                       "use seeded generators")
         self.generic_visit(node)
 
     # ---------------------------------------------------------- RL104 ----
     def _check_iter(self, it: ast.AST, line: int) -> None:
-        if _is_set_expr(it):
+        if not self.clock_only and _is_set_expr(it):
             self._add("RL104", line,
                       "iteration over an unordered set expression",
                       "iterate sorted(...) so downstream order is "
@@ -157,7 +214,7 @@ class _Lint(ast.NodeVisitor):
     def visit_DictComp(self, node: ast.DictComp) -> None:
         for gen in node.generators:
             self._check_iter(gen.iter, node.lineno)
-        if _is_float_const(node.key):
+        if not self.clock_only and _is_float_const(node.key):
             self._add("RL105", node.lineno,
                       "dict comprehension with float keys",
                       "key on ints/strings (quantize or stringify)")
@@ -166,7 +223,8 @@ class _Lint(ast.NodeVisitor):
     # ---------------------------------------------------------- RL105 ----
     def visit_Dict(self, node: ast.Dict) -> None:
         for k in node.keys:
-            if k is not None and _is_float_const(k):
+            if not self.clock_only and k is not None \
+                    and _is_float_const(k):
                 self._add("RL105", k.lineno,
                           "dict literal with float key",
                           "key on ints/strings (quantize or stringify)")
@@ -179,6 +237,15 @@ def _is_float_const(node: Optional[ast.AST]) -> bool:
 
 
 def analyze_determinism(path: Path, source: str) -> List[Finding]:
+    """Full RL101–RL105 battery (deterministic-core scope)."""
     lint = _Lint(path)
+    lint.visit(ast.parse(source))
+    return lint.findings
+
+
+def analyze_clock_boundary(path: Path, source: str) -> List[Finding]:
+    """RL106 only: wall-clock reads in boundary-scope packages (the
+    rest of the determinism battery does not apply there)."""
+    lint = _Lint(path, clock_rule="RL106", clock_only=True)
     lint.visit(ast.parse(source))
     return lint.findings

@@ -49,6 +49,8 @@ RULES: Dict[str, Tuple[str, str]] = {
     "RL103": ("error", "environment read in deterministic code"),
     "RL104": ("error", "unordered set iteration feeding ordered output"),
     "RL105": ("error", "float-keyed dict (hash/round-trip fragile)"),
+    "RL106": ("error", "wall-clock read outside the injected-clock "
+                       "boundary"),
     # pallas kernel contract checker (kernels/*.py)
     "RL201": ("error", "non-fp32 VMEM scratch accumulator"),
     "RL202": ("error", "BlockSpec index_map arity != grid + prefetch"),

@@ -7,8 +7,11 @@ location unless overridden):
   * effects race detector  — ``src/repro/env/tools_impl.py`` (diffed
     against the live tool registry);
   * determinism lint       — ``src/repro/{core,serving,env,kernels}``
-    (``benchmarks/``, ``launch/``, ``training/`` and tests may read
-    wall-clock legitimately and are out of scope);
+    under the full RL101–RL105 battery; every other ``src/repro``
+    package gets the RL106 injected-clock boundary rule only, except
+    the clock providers ``obs/`` and ``launch/``
+    (``determinism.wallclock_scope`` is the dispatcher;
+    ``benchmarks/`` and tests stay out of scope);
   * kernel contracts       — ``src/repro/kernels/*.py`` except
     ``ref.py``/``backend.py`` (jnp oracles are not Pallas kernels);
   * backend registry       — ``src/repro/kernels/`` as a unit.
@@ -24,11 +27,17 @@ from typing import Dict, Iterable, List, Optional, Sequence
 
 from repro.analysis import findings as F
 from repro.analysis.backend_check import analyze_backend_registry
-from repro.analysis.determinism import analyze_determinism
+from repro.analysis.determinism import (analyze_clock_boundary,
+                                        analyze_determinism,
+                                        wallclock_scope)
 from repro.analysis.effects_check import analyze_effects
 from repro.analysis.kernel_contracts import analyze_kernels
 
 DETERMINISM_DIRS = ("core", "serving", "env", "kernels")
+#: RL106-only scope: everything else under src/repro except the
+#: allowlisted clock providers (obs/, launch/)
+BOUNDARY_DIRS = ("analysis", "common", "configs", "distributed",
+                 "models", "training")
 BASELINE_NAME = "analysis_baseline.json"
 
 
@@ -56,7 +65,12 @@ def analyze_file(path: Path, root: Path,
     source = path.read_text()
     rel = _rel(path, root)
     out: List[F.Finding] = []
-    out.extend(analyze_determinism(Path(rel), source))
+    scope = wallclock_scope(rel)
+    if scope == "full":
+        out.extend(analyze_determinism(Path(rel), source))
+    elif scope == "boundary":
+        out.extend(analyze_clock_boundary(Path(rel), source))
+    # "allow": the clock providers get no determinism-family lint
     has_effects_table = any(ln.startswith("TOOL_EFFECTS")
                             for ln in source.splitlines())
     if path.name == "tools_impl.py" or has_effects_table:
@@ -107,7 +121,7 @@ def run_repo(root: Optional[Path] = None,
     except Exception:
         registry_names = None
 
-    for d in DETERMINISM_DIRS:
+    for d in DETERMINISM_DIRS + BOUNDARY_DIRS:
         for f in sorted((pkg / d).rglob("*.py")):
             findings.extend(analyze_file(f, root,
                                          registry_names=registry_names))

@@ -29,6 +29,8 @@ import jax
 
 from repro.configs import get_config, get_smoke_config
 from repro.models.model import init_params
+from repro.obs import Tracer
+from repro.obs.export import write_trace
 from repro.serving.cluster import ROUTER_POLICIES, EngineCluster
 from repro.serving.engine import InferenceEngine
 from repro.serving.sched import ADMISSION_POLICIES
@@ -47,6 +49,9 @@ def _fmt(v, unit: str = "") -> str:
 
 
 def serve_cluster(cfg, params, args, spec_decode=None):
+    # cluster engines run on the tick clock only, so the trace is
+    # wall-free and byte-identical across same-seed runs
+    tracer = Tracer() if args.trace_out else None
     cluster = EngineCluster(cfg, params, args.replicas,
                             router=args.router,
                             max_batch=args.max_batch,
@@ -59,7 +64,8 @@ def serve_cluster(cfg, params, args, spec_decode=None):
                             prefill_budget=args.prefill_budget,
                             interleave=not args.no_interleave,
                             admission=args.admission,
-                            sla_spill=args.sla_spill)
+                            sla_spill=args.sla_spill,
+                            tracer=tracer)
     mix = (skewed_mix(hot_frac=args.skew) if args.skew > 0
            else uniform_mix())
     reqs = make_workload(WorkloadConfig(
@@ -100,6 +106,10 @@ def serve_cluster(cfg, params, args, spec_decode=None):
     for r in s["per_replica"]:
         print(f"  replica {r['replica']}: {r['admissions']} admissions, "
               f"hit {r['hit_ratio']:.2f}, util {r['utilization']:.2f}")
+    if tracer is not None:
+        write_trace(tracer, args.trace_out)
+        print(f"trace: {len(tracer.records)} records -> "
+              f"{args.trace_out}")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -169,6 +179,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "schedule, like any co-tenancy change)")
     ap.add_argument("--draft-k", type=int, default=4,
                     help="draft tokens per speculative round (>= 1)")
+    ap.add_argument("--trace-out", default="",
+                    help="write the request-lifecycle trace here after "
+                         "the run: .jsonl = compact record-per-line, "
+                         "anything else = Chrome trace-event JSON "
+                         "(open in Perfetto / chrome://tracing). "
+                         "Cluster traces are tick-only and "
+                         "byte-identical across same-seed runs; the "
+                         "single-engine path injects time.time, so "
+                         "records also carry wall timestamps")
     return ap
 
 
@@ -217,6 +236,7 @@ def main(argv=None):
         serve_cluster(cfg, params, args, spec_decode=spec)
         return
 
+    tracer = Tracer() if args.trace_out else None
     engine = InferenceEngine(cfg, params, max_batch=args.max_batch,
                              cache_len=args.cache_len,
                              backend=args.backend,
@@ -227,8 +247,10 @@ def main(argv=None):
                              prefill_budget=args.prefill_budget,
                              interleave=not args.no_interleave,
                              admission=args.admission,
+                             tracer=tracer,
                              # the launcher is the wall-clock boundary:
                              # live latency numbers want real time
+                             # (the engine binds it to the tracer too)
                              clock=time.time)
     prompts = [
         f"Plot xview1 images around Tampa Bay with cloud cover below "
@@ -257,6 +279,10 @@ def main(argv=None):
     ttft = [r.first_token_t - r.enqueue_t for r in done]
     print(f"p50 latency {sorted(lat)[len(lat)//2]*1000:.0f}ms | "
           f"p50 TTFT {sorted(ttft)[len(ttft)//2]*1000:.0f}ms")
+    if tracer is not None:
+        write_trace(tracer, args.trace_out)
+        print(f"trace: {len(tracer.records)} records -> "
+              f"{args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -49,8 +49,7 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
+from repro.obs import MetricsRegistry, NULL_TRACER, percentile
 from repro.serving.engine import EngineSession, InferenceEngine, Request
 from repro.serving.sampling import SamplerConfig
 from repro.serving.workload import WorkloadRequest
@@ -191,8 +190,9 @@ class RequestTrace:
 def _pct(values: List[int], q: float) -> Optional[float]:
     """Percentile, or None for an empty series — 0.0 would read as a
     perfect latency for a run that finished nothing (the bench renders
-    None as "n/a")."""
-    return float(np.percentile(np.asarray(values), q)) if values else None
+    None as "n/a"). One implementation for the whole serving stack:
+    obs.metrics.percentile."""
+    return percentile(values, q)
 
 
 @dataclass
@@ -313,7 +313,15 @@ class EngineCluster:
                  spec_decode=None,
                  prefill_budget: Optional[int] = None,
                  interleave: Optional[bool] = None,
-                 admission: Optional[str] = None):
+                 admission: Optional[str] = None,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None):
+        # one shared registry for the fleet: each replica publishes
+        # through a replica=i facade, the cluster's own counters and
+        # latency histograms sit unlabeled beside them. One shared
+        # tracer: replicas stamp their replica index as the track
+        # group, so exported traces are keyed (replica, slot).
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         if engines is not None:
             # prebuilt replicas keep their own configuration; sizing
             # kwargs would be silently dropped, so refuse them
@@ -330,6 +338,13 @@ class EngineCluster:
                     "interleave/admission (prebuilt replicas keep "
                     "their own configuration)")
             self.replicas = list(engines)
+            for i, e in enumerate(self.replicas):
+                # prebuilt replicas keep their own registries; the
+                # shared tracer (when given) still replaces their
+                # default NullTracer so the fleet records one trace
+                e.trace_group = i
+                if tracer is not None:
+                    e.tracer = tracer
         else:
             assert cfg is not None and params is not None
             max_batch = 8 if max_batch is None else max_batch
@@ -347,7 +362,11 @@ class EngineCluster:
                                     prefill_budget=prefill_budget,
                                     interleave=(True if interleave
                                                 is None else interleave),
-                                    admission=admission or "fifo")
+                                    admission=admission or "fifo",
+                                    tracer=self.tracer,
+                                    metrics=self.metrics.labeled(
+                                        replica=i))
+                e.trace_group = i
                 if self.replicas:
                     # identical (cfg, cache_len, backend) closures =>
                     # replicas share one jit cache: compile once, not N×
@@ -369,12 +388,22 @@ class EngineCluster:
         self._prefix_home: Dict[str, int] = {}
         self._util_ticks = [0] * len(self.replicas)
         self._finished_traces: List[RequestTrace] = []
+        # cluster-level registry slice: routed submissions plus the
+        # served-request latency distributions in ticks (the same
+        # numbers ClusterStats.summary percentiles — one storage)
+        self._c_routed = self.metrics.counter("cluster_requests_routed")
+        self._h_ttft = self.metrics.histogram("cluster_ttft_ticks")
+        self._h_e2e = self.metrics.histogram("cluster_e2e_ticks")
 
     def reset(self, seed: Optional[int] = None):
         """Recycle the whole cluster between workloads: reset every
         replica (slots, queues, stats, prefix caches — jit caches are
         kept, so it serves warm), zero the tick clock, drop traces and
         routing state. Prefixes must be re-registered afterwards."""
+        # full-registry sweep first (zeroes the cluster histograms and
+        # every replica facade's slice in one pass), then per-replica
+        # resets re-publish their fresh pool gauges
+        self.metrics.reset()
         for i, e in enumerate(self.replicas):
             e.reset(None if seed is None else seed + i)
         self.router.reset()
@@ -428,6 +457,7 @@ class EngineCluster:
                index: int = -1, turn: int = 0) -> Tuple[int, int]:
         """Route one request; returns (replica index, request id)."""
         r = self.route(prefix_key, slack=sla_ticks)
+        self._c_routed.inc()
         rid = self.replicas[r].add_request(
             prompt, max_new_tokens, sampler, prefix_key=prefix_key,
             session_id=session_id, sla_ticks=sla_ticks)
@@ -478,6 +508,16 @@ class EngineCluster:
                     t.finish_tick = self.tick
                     t.request = req
                     self._finished_traces.append(t)
+                    if req.finish_reason != "sla_expired":
+                        # served requests only — expired drops never
+                        # produced a token and would poison the
+                        # latency distributions (summary() applies
+                        # the same exclusion)
+                        if t.first_token_tick is not None:
+                            self._h_ttft.observe(t.first_token_tick
+                                                 - t.arrival_tick + 1)
+                        self._h_e2e.observe(t.finish_tick
+                                            - t.arrival_tick + 1)
             for s in e.slots:
                 if s is not None:
                     t = self.traces.get((i, s.request_id))

@@ -78,6 +78,7 @@ from repro.common.config import ModelConfig, WINDOW_KINDS
 from repro.kernels.ref import paged_gather_kv
 from repro.models.model import (decode_step, init_cache, init_paged_cache,
                                 prefill, prefill_extend, verify_extend)
+from repro.obs import MetricsRegistry, NULL_TRACER, StatsView
 from repro.serving.kvpool import BlockTable, KVBlockPool
 from repro.serving.sampling import SamplerConfig, sample
 from repro.serving.sched import AdmissionQueue, deadline_step, victim_key
@@ -85,6 +86,29 @@ from repro.serving.specdec import SpecConfig, SpecDecoder, check_spec_stack
 from repro.serving.tokenizer import SPECIALS, TOKENIZER
 
 KV_MODES = ("dense", "paged")
+
+# The engine's counter surface (the legacy ``engine.stats`` keys), now a
+# StatsView over the obs metrics registry. Semantics:
+#   decode_steps/prefills/tokens_generated — forward counts (decode_steps
+#     counts TARGET forwards, also under spec decode);
+#   prefix_* — prompt-prefix cache traffic (hits, tokens saved,
+#     registrations, LRU pin evictions);
+#   admissions/preemptions/resumes — slot lifecycle;
+#   prefill_chunks/stall_ticks/sla_expired — stall-free scheduling:
+#     chunked-prefill slabs run, decode ticks skipped behind pending
+#     prefills (interleave=False only), queued requests dropped past
+#     their SLA deadline;
+#   spec_rounds/spec_drafted/spec_accepted — speculative decoding (zero
+#     when disabled): rounds = verify forwards, drafted/accepted = draft
+#     token counts (accept rate = their ratio).
+# The reset-audit test (tests/test_obs.py) pins this tuple against
+# engine.reset() so new counters can't silently leak across runs.
+ENGINE_STAT_KEYS = (
+    "decode_steps", "prefills", "tokens_generated", "prefix_hits",
+    "prefix_tokens_saved", "admissions", "prefix_registrations",
+    "preemptions", "resumes", "prefix_evictions", "prefill_chunks",
+    "stall_ticks", "sla_expired", "spec_rounds", "spec_drafted",
+    "spec_accepted")
 
 
 @dataclass
@@ -256,7 +280,8 @@ class InferenceEngine:
                  prefill_budget: Optional[int] = None,
                  interleave: bool = True,
                  admission: str = "fifo",
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None):
         from repro.kernels.backend import get_backend
         self.cfg = cfg
         self.params = params
@@ -266,6 +291,20 @@ class InferenceEngine:
         # live-serve launcher passes time.time; ticks/tests keep the
         # zero clock (timestamps all 0.0, TTFT math is tick-based).
         self._clock: Callable[[], float] = clock or (lambda: 0.0)
+        # Observability (repro.obs) is injected like the clock. The
+        # default NullTracer records nothing and tracing never branches
+        # control flow, so tokens are bitwise identical tracer on/off;
+        # a cluster passes one shared registry scoped per replica.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        # wall time in traces is opt-in: only an *injected* clock is
+        # ever bound — the deterministic zero clock is not a wall clock
+        self.tracer.bind_clock(clock)
+        # exporter track group; the cluster overwrites this with the
+        # replica index so traces are keyed (replica, slot)
+        self.trace_group: int = 0
+        # request_id -> open "request" lifecycle span handle
+        self._req_spans: Dict[int, int] = {}
         self.max_batch = max_batch
         self.cache_len = cache_len
         # resolve once so every jitted step traces one fixed backend
@@ -290,7 +329,8 @@ class InferenceEngine:
             # default physical budget: exactly the dense reservation
             self.kv_blocks = (kv_blocks if kv_blocks is not None
                               else max_batch * cache_len // bs)
-            self.pool = KVBlockPool(self.kv_blocks, bs)
+            self.pool = KVBlockPool(self.kv_blocks, bs,
+                                    metrics=self.metrics)
             self.cache = init_paged_cache(cfg, max_batch, cache_len,
                                           self.kv_blocks, bs)
             self.tables: List[Optional[BlockTable]] = [None] * max_batch
@@ -313,7 +353,8 @@ class InferenceEngine:
         # admission order is a policy now (serving/sched.py): "fifo"
         # keeps the seed deque behavior, "slack" admits by SLA deadline
         self.admission = admission
-        self.queue: AdmissionQueue = AdmissionQueue(admission)
+        self.queue: AdmissionQueue = AdmissionQueue(admission,
+                                                    metrics=self.metrics)
         self.interleave = interleave
         self.prefill_budget = prefill_budget
         # engine step counter — the tick clock every latency stamp
@@ -329,22 +370,10 @@ class InferenceEngine:
         self.prefixes: Dict[str, CachedPrefix] = {}
         self._next_id = 0
         self._next_session = 0
-        self.stats = {"decode_steps": 0, "prefills": 0,
-                      "tokens_generated": 0, "prefix_hits": 0,
-                      "prefix_tokens_saved": 0, "admissions": 0,
-                      "prefix_registrations": 0, "preemptions": 0,
-                      "resumes": 0, "prefix_evictions": 0,
-                      # stall-free scheduling: chunked-prefill slabs
-                      # run, decode steps skipped behind pending
-                      # prefills (interleave=False only), queued
-                      # requests dropped past their SLA deadline
-                      "prefill_chunks": 0, "stall_ticks": 0,
-                      "sla_expired": 0,
-                      # speculative decoding (zero when disabled):
-                      # rounds = verify forwards, drafted/accepted =
-                      # draft-token counts (accept rate = their ratio)
-                      "spec_rounds": 0, "spec_drafted": 0,
-                      "spec_accepted": 0}
+        # dict-compatible view over registry counters: same keys and
+        # mapping surface as the ad-hoc dict it replaced (ENGINE_STAT_KEYS
+        # documents each key), one storage for all of them
+        self.stats = StatsView(self.metrics, ENGINE_STAT_KEYS)
         self._kv_bytes_total = _kv_cache_bytes(self.cache["segments"])
         self._kv_peak_blocks = 0       # paged: peak pool blocks in use
         self._kv_peak_shared = 0       # paged: peak CoW-shared blocks
@@ -388,7 +417,8 @@ class InferenceEngine:
             check_spec_stack(cfg, "target model")
             self.spec = SpecDecoder(spec_decode, max_batch=max_batch,
                                     cache_len=cache_len,
-                                    backend=self.backend)
+                                    backend=self.backend,
+                                    metrics=self.metrics)
             self._verify = jax.jit(
                 lambda p, c, b: verify_extend(p, cfg, c, b, backend=be))
 
@@ -406,6 +436,11 @@ class InferenceEngine:
                       sla_ticks=sla_ticks, enqueue_t=self._clock(),
                       enqueue_step=self.step_no)
         self._next_id += 1
+        if self.tracer.enabled:
+            self.tracer.event("enqueue", tick=self.step_no,
+                              group=self.trace_group, lane="queue",
+                              request=req.request_id,
+                              prompt_tokens=len(ids))
         self.queue.push(req)
         return req.request_id
 
@@ -441,9 +476,17 @@ class InferenceEngine:
         if seed is not None:
             self.seed = seed
         self.rng = jax.random.PRNGKey(self.seed)
+        # one sweep zeroes every registry-backed metric this engine
+        # publishes (stats view, queue, pool, spec); a shared-registry
+        # facade zeroes only this engine's slice. The tracer is NOT
+        # cleared: a trace is a session log — spans carry their ticks,
+        # and a mid-flight reset abandons the open request spans.
+        self.metrics.reset()
+        self._req_spans.clear()
         self.cache["pos"] = jnp.zeros((self.max_batch,), jnp.int32)
         if self.kv_mode == "paged":
-            self.pool = KVBlockPool(self.kv_blocks, self.block_size)
+            self.pool = KVBlockPool(self.kv_blocks, self.block_size,
+                                    metrics=self.metrics)
             self.tables = [None] * self.max_batch
             self._prefix_tables = {}
             self._prefix_lru = {}
@@ -459,7 +502,6 @@ class InferenceEngine:
         self.prefixes.clear()
         self._next_id = 0
         self._next_session = 0
-        self.stats = {k: 0 for k in self.stats}
         self._kv_peak_blocks = 0
         self._kv_peak_shared = 0
         self._kv_peak_slots = 0
@@ -591,6 +633,10 @@ class InferenceEngine:
         self.pool.free(self._prefix_tables.pop(key))
         del self._prefix_lru[key]
         self.stats["prefix_evictions"] += 1
+        if self.tracer.enabled:
+            self.tracer.event("kv_evict", tick=self.step_no,
+                              group=self.trace_group, lane="kv",
+                              prefix=key)
         return True
 
     def _install(self, slot: int, req: Request, table: BlockTable,
@@ -645,6 +691,14 @@ class InferenceEngine:
         # arrivals); slack mode re-competes by deadline
         self.queue.push(req, front=True)
         self.stats["preemptions"] += 1
+        h = self._req_spans.pop(req.request_id, None)
+        if h is not None:
+            self.tracer.end(h, tick=self.step_no, preempted=True,
+                            tokens=len(req.output))
+        if self.tracer.enabled:
+            self.tracer.event("preempt", tick=self.step_no,
+                              group=self.trace_group, lane="queue",
+                              request=req.request_id, slot=slot)
 
     def _finish_now(self, req: Request, reason: str):
         req.done = True
@@ -658,6 +712,18 @@ class InferenceEngine:
             req.first_token_t = req.finish_t
         if req.first_token_step is None:
             req.first_token_step = req.finish_step
+        h = self._req_spans.pop(req.request_id, None)
+        if h is not None:
+            self.tracer.end(h, tick=self.step_no, reason=reason,
+                            tokens=len(req.output))
+        elif self.tracer.enabled:
+            # never admitted (sla_expired / paged up-front refusals):
+            # no lifecycle span to close — mark the drop on the queue
+            # lane instead
+            self.tracer.event(
+                "sla_expired" if reason == "sla_expired" else "finish",
+                tick=self.step_no, group=self.trace_group, lane="queue",
+                request=req.request_id, reason=reason)
 
     def _ensure_room(self, width: int = 1) -> List[Request]:
         """Pre-decode: every active slot must own blocks for the
@@ -775,6 +841,23 @@ class InferenceEngine:
         self.stats["prefills"] += 1
         return logits, dict(cache1), None
 
+    def _trace_admit(self, req: Request, slot: int,
+                     resumed: bool = False):
+        """Open the request's lifecycle span on its slot lane (admit →
+        finish/preempt). The paired instant on the queue lane marks the
+        queue handoff; a resume opens a fresh span — one span per slot
+        residency, so preempted requests show as separate segments."""
+        if not self.tracer.enabled:
+            return
+        self.tracer.event("resume" if resumed else "admit",
+                          tick=self.step_no, group=self.trace_group,
+                          lane="queue", request=req.request_id,
+                          slot=slot)
+        self._req_spans[req.request_id] = self.tracer.begin(
+            "request", tick=self.step_no, group=self.trace_group,
+            lane=slot, request=req.request_id,
+            prompt_tokens=len(req.prompt), resumed=resumed)
+
     def _first_token(self, req: Request, logits) -> bool:
         """Sample the admission token; True when it is terminal (an
         <eos> first token, or a max_new_tokens=1 budget — never decode
@@ -785,6 +868,14 @@ class InferenceEngine:
         req.output.append(tok)
         req.first_token_t = self._clock()
         req.first_token_step = self.step_no
+        if self.tracer.enabled:
+            h = self._req_spans.get(req.request_id)
+            lane = (self.tracer.lane_of(h)
+                    if h is not None else None)
+            self.tracer.event("first_token", tick=self.step_no,
+                              group=self.trace_group,
+                              lane="queue" if lane is None else lane,
+                              request=req.request_id)
         if tok == SPECIALS["<eos>"] or \
                 len(req.output) >= req.max_new_tokens:
             self._finish_now(req, "eos" if tok == SPECIALS["<eos>"]
@@ -834,6 +925,7 @@ class InferenceEngine:
                 continue
             self.stats["admissions"] += 1
             req.admit_step = self.step_no
+            self._trace_admit(req, slot)
             if self.prefill_budget is not None:
                 free.popleft()
                 self._start_pending(slot, req, self._prefix_hit(req),
@@ -897,6 +989,7 @@ class InferenceEngine:
                     req.output[-1])
                 req.swap = None
                 self.stats["resumes"] += 1
+                self._trace_admit(req, slot, resumed=True)
                 if self.spec is not None:
                     # the swap restored the target's KV, but the draft
                     # cache was dropped at preemption — rebuild it over
@@ -957,6 +1050,7 @@ class InferenceEngine:
             self.queue.pop()
             self.stats["admissions"] += 1
             req.admit_step = self.step_no
+            self._trace_admit(req, slot)
             if self.prefill_budget is not None:
                 # chunked admission: take the blocks NOW (same math as
                 # the monolithic path below) so co-resident decodes
@@ -966,6 +1060,12 @@ class InferenceEngine:
                     table = self.pool.fork(ptab, total)
                     self.pool.cow_from(table, j0)
                     self.pool.grow(table, total + 1)
+                    if self.tracer.enabled:
+                        self.tracer.event("cow_fork", tick=self.step_no,
+                                          group=self.trace_group,
+                                          lane="kv",
+                                          request=req.request_id,
+                                          shared_blocks=j0)
                 else:
                     table = self.pool.alloc(total + 1)
                 table.n_tokens = total
@@ -986,6 +1086,12 @@ class InferenceEngine:
                 table = self.pool.fork(ptab, total)
                 self.pool.cow_from(table, j0)
                 self.pool.grow(table, total + 1)
+                if self.tracer.enabled:
+                    self.tracer.event("cow_fork", tick=self.step_no,
+                                      group=self.trace_group,
+                                      lane="kv",
+                                      request=req.request_id,
+                                      shared_blocks=j0)
             else:
                 table = self.pool.alloc(total + 1)
             table.n_tokens = total
@@ -1066,6 +1172,11 @@ class InferenceEngine:
                 p.i = len(p.toks)
             spent += 1
         self.stats["prefill_chunks"] += spent
+        if spent and self.tracer.enabled:
+            self.tracer.event("prefill_chunk", tick=self.step_no,
+                              group=self.trace_group, lane=p.slot,
+                              request=p.req.request_id, chunks=spent,
+                              done_tokens=p.i)
         return spent
 
     def _complete_pending(self, slot: int) -> Optional[Request]:
@@ -1156,6 +1267,10 @@ class InferenceEngine:
             return finished
         if stalled:
             self.stats["stall_ticks"] += 1
+            if self.tracer.enabled:
+                self.tracer.event("stall", tick=self.step_no,
+                                  group=self.trace_group, lane="engine",
+                                  pending=len(self._pending))
             return finished
         if self.spec is not None:
             finished.extend(self._spec_step(active))
@@ -1163,6 +1278,10 @@ class InferenceEngine:
         logits, self.cache = self._decode(self.params, self.cache,
                                           {"tokens": self._last_tokens})
         self.stats["decode_steps"] += 1
+        if self.tracer.enabled:
+            self.tracer.event("decode", tick=self.step_no,
+                              group=self.trace_group, lane="engine",
+                              active=len(active))
         if self.kv_mode == "paged":
             for i in active:          # one KV row written per sequence
                 self.tables[i].n_tokens += 1
@@ -1214,6 +1333,7 @@ class InferenceEngine:
         new_pos = pos0.copy()
         finished: List[Request] = []
         full_accept = False
+        round_accepted = 0
         for i in active:
             req = self.slots[i]
             emitted = accepted = 0
@@ -1238,6 +1358,7 @@ class InferenceEngine:
                     break
             self.stats["spec_drafted"] += k
             self.stats["spec_accepted"] += accepted
+            round_accepted += accepted
             full_accept = full_accept or accepted == k
             new_pos[i] = int(pos0[i]) + emitted
             self._last_tokens = self._last_tokens.at[i, 0].set(
@@ -1254,6 +1375,12 @@ class InferenceEngine:
                 new_pos[i] = 0
                 if self.kv_mode == "paged":
                     self._release_slot(i)
+        if self.tracer.enabled:
+            self.tracer.event("spec_round", tick=self.step_no,
+                              group=self.trace_group, lane="engine",
+                              active=len(active),
+                              drafted=k * len(active),
+                              accepted=round_accepted)
         self.cache["pos"] = jnp.asarray(new_pos, jnp.int32)
         if full_accept:
             self.spec.catch_up()

@@ -60,7 +60,7 @@ class KVBlockPool:
     blocks. All methods are O(log n) or O(table); none touch device
     memory."""
 
-    def __init__(self, n_blocks: int, block_size: int):
+    def __init__(self, n_blocks: int, block_size: int, metrics=None):
         if n_blocks <= 0 or block_size <= 0:
             raise ValueError(f"need positive n_blocks/block_size, got "
                              f"{n_blocks}/{block_size}")
@@ -72,6 +72,18 @@ class KVBlockPool:
         # incremental count of blocks with ref > 1: shared/owned stats
         # are read every engine step, so no O(n_blocks) scans there
         self._n_shared = 0
+        # optional obs registry gauges, refreshed after every mutator
+        self._g_used = metrics.gauge("kv_blocks_used") if metrics else None
+        self._g_free = metrics.gauge("kv_blocks_free") if metrics else None
+        self._g_shared = (metrics.gauge("kv_blocks_shared")
+                          if metrics else None)
+        self._publish()
+
+    def _publish(self):
+        if self._g_used is not None:
+            self._g_used.set(self.used_blocks())
+            self._g_free.set(self.free_blocks())
+            self._g_shared.set(self.shared_blocks())
 
     # ------------------------------------------------------- introspection ----
     def free_blocks(self) -> int:
@@ -109,6 +121,7 @@ class KVBlockPool:
                 f"need {need} blocks, {len(self._free)} free")
         t = BlockTable([self._alloc_block() for _ in range(need)],
                        n_tokens)
+        self._publish()
         return t
 
     def fork(self, table: BlockTable, n_tokens: int = -1) -> BlockTable:
@@ -119,6 +132,7 @@ class KVBlockPool:
             if self.ref[b] == 1:
                 self._n_shared += 1
             self.ref[b] += 1
+        self._publish()
         return BlockTable(list(table.blocks),
                           table.n_tokens if n_tokens < 0 else n_tokens)
 
@@ -138,6 +152,7 @@ class KVBlockPool:
             self._release(old)
             table.blocks[i] = new
             changed.append(i)
+        self._publish()
         return changed
 
     def append_block(self, table: BlockTable) -> int:
@@ -146,6 +161,7 @@ class KVBlockPool:
         actually written. Returns the new block id."""
         b = self._alloc_block()
         table.blocks.append(b)
+        self._publish()
         return b
 
     def grow(self, table: BlockTable, n_tokens: int) -> List[int]:
@@ -180,6 +196,7 @@ class KVBlockPool:
             self._release(b)
         table.blocks = []
         table.n_tokens = 0
+        self._publish()
 
     # -------------------------------------------------------------- stats ----
     def stats(self) -> Dict[str, int]:

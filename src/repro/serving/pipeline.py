@@ -41,7 +41,7 @@ intent_affinity`` serves the pipeline on a fleet.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.agent import Agent, AgentSession, TaskResult
@@ -49,6 +49,7 @@ from repro.core.planner import CompiledStep
 from repro.env.evaluator import EvalReport, evaluate_results
 from repro.env.tasks import Task
 from repro.env.tools_impl import execute_graph_batch
+from repro.obs import MetricsRegistry, NULL_TRACER
 from repro.serving.sampling import SamplerConfig
 
 
@@ -70,34 +71,54 @@ class PipelineConfig:
     fuse_sessions: bool = True
 
 
-@dataclass
+# registry-backed PipelineStats fields (attribute surface preserved as
+# properties reading/writing the underlying metric objects):
+#   admitted/gate_batches/ticks/engine_turns — stage throughput;
+#   fused_batches/fused_calls/plan_round_trips/plan_virtual_steps — the
+#     tool-graph compiler's cross-session fused execution;
+#   peak_concurrent/fused_sessions_peak — high-water gauges.
+_PIPE_COUNTERS = ("admitted", "gate_batches", "ticks", "engine_turns",
+                  "fused_batches", "fused_calls", "plan_round_trips",
+                  "plan_virtual_steps")
+_PIPE_GAUGES = ("peak_concurrent", "fused_sessions_peak")
+
+
 class PipelineStats:
-    admitted: int = 0
-    gate_batches: int = 0
-    gate_batch_sizes: List[int] = field(default_factory=list)
-    ticks: int = 0               # round-robin sweeps over active sessions
-    peak_concurrent: int = 0
-    engine_turns: int = 0
+    """Pipeline stage counters, now views over an obs metrics registry
+    (``pipeline_*`` metrics) — the attribute surface of the old
+    dataclass is preserved via properties, so existing readers
+    (`stats.admitted += 1`, benches, tests) are untouched. The engine_*
+    descriptor fields stay plain attributes: they describe the serving
+    configuration, not the run."""
 
-    engine_backend: str = ""     # kernel backend of the mirrored engine
-    engine_replicas: int = 0     # 1 = single engine, N = EngineCluster
-    engine_kv_mode: str = ""     # "dense" | "paged" KV-cache manager
-    engine_spec_k: int = 0       # draft tokens/round (0 = spec off)
-    engine_prefill_budget: int = 0   # chunked-prefill tokens/step (0 = off)
-    engine_admission: str = ""   # "fifo" | "slack" admission order
+    def __init__(self, metrics: Optional[MetricsRegistry] = None):
+        self.metrics = (metrics if metrics is not None
+                        else MetricsRegistry())
+        self._c = {k: self.metrics.counter("pipeline_" + k)
+                   for k in _PIPE_COUNTERS}
+        self._g = {k: self.metrics.gauge("pipeline_" + k)
+                   for k in _PIPE_GAUGES}
+        self._h_gate = self.metrics.histogram("pipeline_gate_batch_size")
+        self.engine_backend = ""     # kernel backend of mirrored engine
+        self.engine_replicas = 0     # 1 = single engine, N = cluster
+        self.engine_kv_mode = ""     # "dense" | "paged"
+        self.engine_spec_k = 0       # draft tokens/round (0 = spec off)
+        self.engine_prefill_budget = 0   # chunked-prefill tokens (0=off)
+        self.engine_admission = ""   # "fifo" | "slack"
 
-    # tool-graph compiler (cross-session fused execution)
-    fused_batches: int = 0       # batched execute_graph_batch calls
-    fused_calls: int = 0         # tool calls executed inside them
-    fused_sessions_peak: int = 0  # most sessions fused into one batch
-    plan_round_trips: int = 0    # planner LLM requests across sessions
-    plan_virtual_steps: int = 0  # linear-equivalent steps they covered
+    @property
+    def gate_batch_sizes(self) -> List[int]:
+        return [int(v) for v in self._h_gate.values]
+
+    def observe_gate_batch(self, n: int):
+        self._h_gate.observe(n)
 
     def summary(self) -> Dict[str, float]:
-        sizes = self.gate_batch_sizes or [0]
+        # mean_gate_batch follows the empty-series convention: None
+        # (rendered "n/a"), never a fabricated 0.0
         return {"admitted": self.admitted,
                 "gate_batches": self.gate_batches,
-                "mean_gate_batch": sum(sizes) / max(len(sizes), 1),
+                "mean_gate_batch": self._h_gate.mean(),
                 "ticks": self.ticks,
                 "peak_concurrent": self.peak_concurrent,
                 "engine_turns": self.engine_turns,
@@ -114,6 +135,18 @@ class PipelineStats:
                 "plan_virtual_steps": self.plan_virtual_steps}
 
 
+def _metric_prop(store: str, key: str) -> property:
+    return property(
+        lambda self: getattr(self, store)[key].value,
+        lambda self, v: setattr(getattr(self, store)[key], "value", v))
+
+
+for _k in _PIPE_COUNTERS:
+    setattr(PipelineStats, _k, _metric_prop("_c", _k))
+for _k in _PIPE_GAUGES:
+    setattr(PipelineStats, _k, _metric_prop("_g", _k))
+
+
 class GeckOptPipeline:
     """Drives many agent sessions through gate → plan → execute.
 
@@ -124,11 +157,16 @@ class GeckOptPipeline:
     """
 
     def __init__(self, agent: Agent, config: Optional[PipelineConfig]
-                 = None, engine=None):
+                 = None, engine=None, *, tracer=None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.agent = agent
         self.config = config or PipelineConfig()
         self.engine = engine
-        self.stats = PipelineStats()
+        # observability is injected like the engine's: pass the engine's
+        # tracer/metrics to correlate pipeline-level gate/plan/execute
+        # spans with the per-request engine spans in one trace
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.stats = PipelineStats(metrics)
         if engine is not None:
             # kernel backend rides in with the engine (see engine.py);
             # surfaced here so pipeline summaries record which backend
@@ -170,13 +208,17 @@ class GeckOptPipeline:
         cb = self.config.gate_batch
         for lo in range(0, len(wave), cb):
             chunk = wave[lo:lo + cb]
+            h = self.tracer.begin("gate", tick=self.stats.ticks,
+                                  group="pipeline", lane="gate",
+                                  batch=len(chunk))
             decisions = self.agent.gate.batch(
                 [s.task.query for s in chunk],
                 [s.ledger for s in chunk])
             self.stats.gate_batches += 1
-            self.stats.gate_batch_sizes.append(len(chunk))
+            self.stats.observe_gate_batch(len(chunk))
             for session, (intent, libs) in zip(chunk, decisions):
                 self.agent.apply_gate_result(session, intent, libs)
+            self.tracer.end(h, tick=self.stats.ticks)
 
     def _mirror_to_engine(self, session: AgentSession):
         """Serve the session's first planner turn on the engine. All
@@ -211,17 +253,29 @@ class GeckOptPipeline:
         """
         fusing = (self.config.fuse_sessions
                   and self.agent.planner_cfg.compile_plans)
+        tick = self.stats.ticks
         if not fusing:
-            return [s for s in active if self.agent.step_session(s)]
+            h = self.tracer.begin("plan", tick=tick, group="pipeline",
+                                  lane="plan", sessions=len(active))
+            done = [s for s in active if self.agent.step_session(s)]
+            self.tracer.end(h, tick=tick, finished=len(done))
+            return done
+        h = self.tracer.begin("plan", tick=tick, group="pipeline",
+                              lane="plan", sessions=len(active))
         planned = [(s, self.agent.plan_step(s)) for s in active]
+        self.tracer.end(h, tick=tick, round_trips=len(planned))
         entries = [(s.index, s.workspace, step.graph)
                    for s, step in planned
                    if isinstance(step, CompiledStep) and step.graph.nodes]
+        n_calls = sum(len(g.nodes) for _, _, g in entries)
+        hx = self.tracer.begin("execute_wave", tick=tick,
+                               group="pipeline", lane="execute",
+                               sessions=len(entries), calls=n_calls)
         observations = execute_graph_batch(entries) if entries else {}
+        self.tracer.end(hx, tick=tick)
         if entries:
             self.stats.fused_batches += 1
-            self.stats.fused_calls += sum(
-                len(g.nodes) for _, _, g in entries)
+            self.stats.fused_calls += n_calls
             self.stats.fused_sessions_peak = max(
                 self.stats.fused_sessions_peak, len(entries))
         self.stats.plan_round_trips += len(planned)

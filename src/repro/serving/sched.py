@@ -48,13 +48,19 @@ def deadline_step(req) -> int:
 class AdmissionQueue:
     """Engine admission queue with a pluggable, deterministic order."""
 
-    def __init__(self, policy: str = "fifo"):
+    def __init__(self, policy: str = "fifo", metrics=None):
         if policy not in ADMISSION_POLICIES:
             raise ValueError(f"admission policy must be one of "
                              f"{ADMISSION_POLICIES}, got {policy!r}")
         self.policy = policy
         self._fifo: deque = deque()
         self._heap: List[tuple] = []
+        # optional obs registry publishers (the engine passes its
+        # registry; standalone queues skip the bookkeeping entirely)
+        self._c_push = metrics.counter("queue_pushes") if metrics else None
+        self._c_pop = metrics.counter("queue_pops") if metrics else None
+        self._g_depth = (metrics.gauge("queue_depth_peak")
+                         if metrics else None)
 
     def _key(self, req) -> tuple:
         # (deadline, request_id): request_id is engine-local and
@@ -73,8 +79,13 @@ class AdmissionQueue:
              else self._fifo.append)(req)
         else:
             heapq.heappush(self._heap, (*self._key(req), req))
+        if self._c_push is not None:
+            self._c_push.inc()
+            self._g_depth.max(len(self))
 
     def pop(self):
+        if self._c_pop is not None:
+            self._c_pop.inc()
         if self.policy == "fifo":
             return self._fifo.popleft()
         return heapq.heappop(self._heap)[-1]

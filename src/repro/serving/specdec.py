@@ -99,10 +99,17 @@ class SpecDecoder:
     (``set_pos`` truncation)."""
 
     def __init__(self, spec: SpecConfig, *, max_batch: int,
-                 cache_len: int, backend: str):
+                 cache_len: int, backend: str, metrics=None):
         from repro.kernels.backend import get_backend
         if spec.k < 1:
             raise ValueError(f"spec_decode needs k >= 1, got {spec.k}")
+        # optional obs registry publishers: draft forwards actually run
+        # and catch-up steps spent (the engine's spec_* counters track
+        # the protocol; these track the draft model's compute)
+        self._c_draft = (metrics.counter("spec_draft_forwards")
+                         if metrics else None)
+        self._c_catchup = (metrics.counter("spec_catch_ups")
+                           if metrics else None)
         check_spec_stack(spec.draft_cfg, "draft model")
         self.cfg = spec.draft_cfg
         self.params = spec.draft_params
@@ -174,6 +181,8 @@ class SpecDecoder:
         accepted lengths (``set_pos``)."""
         toks = last_tokens
         outs = []
+        if self._c_draft is not None:
+            self._c_draft.inc(self.k)
         for _ in range(self.k):
             logits, self.cache = self._decode(self.params, self.cache,
                                               {"tokens": toks})
@@ -189,6 +198,8 @@ class SpecDecoder:
         token, whose KV the K proposal steps never wrote. Harmless for
         other slots: the row lands past their truncated ``pos`` and is
         overwritten before becoming visible."""
+        if self._c_catchup is not None:
+            self._c_catchup.inc()
         _, self.cache = self._decode(self.params, self.cache,
                                      {"tokens": self._catchup_tokens})
 

@@ -6,7 +6,6 @@ shardings; the same function lowers in the multi-pod dry-run.
 """
 from __future__ import annotations
 
-import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -35,20 +34,27 @@ def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4,
 
 def train(cfg: ModelConfig, data_iter, n_steps: int, *, seed: int = 0,
           lr: float = 3e-4, remat: bool = False,
-          log_every: int = 10, callback: Optional[Callable] = None):
-    """Single-host training loop used by the examples (CPU-scale)."""
+          log_every: int = 10, callback: Optional[Callable] = None,
+          clock: Optional[Callable[[], float]] = None):
+    """Single-host training loop used by the examples (CPU-scale).
+
+    ``clock`` follows the serving engine's injected-clock convention
+    (the RL106 boundary rule): callers that want real ``wall_s`` in the
+    history pass ``time.time``; the default zero clock keeps the loop
+    wall-free and the history deterministic."""
+    clock = clock or (lambda: 0.0)
     params = init_params(jax.random.PRNGKey(seed), cfg)
     opt_state = adamw_init(params)
     step_fn = jax.jit(make_train_step(cfg, lr=lr, remat=remat))
     history = []
-    t0 = time.time()
+    t0 = clock()
     for step in range(n_steps):
         batch = next(data_iter)
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         if step % log_every == 0 or step == n_steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
-            m["wall_s"] = time.time() - t0
+            m["wall_s"] = clock() - t0
             history.append(m)
             if callback:
                 callback(step, m)

@@ -1,0 +1,17 @@
+"""Seeded RL106 corpus: wall-clock reads outside the injected-clock
+boundary.
+
+Only meaningful when linted under a *boundary-scope* path — a
+``src/repro`` package outside ``core/serving/env/kernels`` and the
+``obs//launch/`` allowlist — so the tests copy this file into a
+throwaway ``src/repro/models/`` tree before running the analyzer
+(under the fixtures path itself, full scope applies and these same
+reads would be RL101)."""
+import time
+from datetime import datetime
+
+
+def stamp_history(history):
+    t0 = time.time()                                    # expect: RL106
+    history.append({"at": datetime.now().isoformat()})  # expect: RL106
+    return time.perf_counter() - t0                     # expect: RL106

@@ -1,0 +1,16 @@
+"""False-positive guard for the RL106 boundary scope: the injected-
+clock convention, plus constructs the FULL determinism battery would
+flag (env reads, raw set iteration, float dict keys) that are legal
+in boundary-scope packages. Linted via a tmp ``src/repro/training/``
+tree copy, like ``bad_clock_boundary.py``."""
+import os
+
+
+def train_like(n, clock=None):
+    # the legal pattern: wall time only through an injected callable
+    clock = clock or (lambda: 0.0)
+    t0 = clock()
+    seen = [x for x in {n, n + 1}]         # RL104 in full scope only
+    flag = os.getenv("REPRO_DEBUG", "")    # RL103 in full scope only
+    table = {0.5: "half"}                  # RL105 in full scope only
+    return clock() - t0, seen, flag, table

@@ -32,6 +32,10 @@ from repro.kernels import backend as KB
 FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
 BAD = ["bad_effects.py", "bad_determinism.py", "bad_kernel.py"]
 CLEAN = ["clean_effects.py", "clean_determinism.py", "clean_kernel.py"]
+# RL106 fixtures are linted under a tmp src/repro/<pkg>/ tree copy:
+# under the fixtures path itself, full scope applies (RL101, not RL106)
+BOUNDARY_BAD = ["bad_clock_boundary.py"]
+BOUNDARY_CLEAN = ["clean_clock_boundary.py"]
 
 _MARKER = re.compile(r"#\s*expect:\s*(RL\d{3}(?:\s*,\s*RL\d{3})*)")
 
@@ -65,7 +69,7 @@ def test_bad_fixture_caught_at_exact_lines(name):
 
 def test_corpus_covers_every_file_rule():
     seeded = set()
-    for name in BAD:
+    for name in BAD + BOUNDARY_BAD:
         seeded |= {rule for _, rule in expected_markers(FIXTURES / name)}
     file_rules = {r for r in F.RULES if not r.startswith("RL3")}
     assert seeded == file_rules
@@ -74,6 +78,59 @@ def test_corpus_covers_every_file_rule():
 @pytest.mark.parametrize("name", CLEAN)
 def test_clean_fixture_has_no_false_positives(name):
     assert run_paths([FIXTURES / name]) == []
+
+
+# --------------------------------------- RL106 injected-clock boundary ----
+
+def _run_as(tmp_path, name, rel_dir):
+    """Lint a fixture as if it lived at <repo>/<rel_dir>/<name>."""
+    tree = tmp_path / rel_dir
+    tree.mkdir(parents=True, exist_ok=True)
+    dst = tree / name
+    dst.write_text((FIXTURES / name).read_text())
+    return run_paths([dst], root=tmp_path)
+
+
+@pytest.mark.parametrize("name", BOUNDARY_BAD)
+def test_boundary_fixture_caught_at_exact_lines(tmp_path, name):
+    expected = expected_markers(FIXTURES / name)
+    assert expected, f"{name} has no expect markers"
+    findings = _run_as(tmp_path, name, "src/repro/models")
+    assert found_pairs(findings) == expected
+    assert {f.rule for f in findings} == {"RL106"}
+    assert all(f.hint for f in findings)
+
+
+@pytest.mark.parametrize("name", BOUNDARY_CLEAN)
+def test_clean_boundary_fixture_silent(tmp_path, name):
+    # RL103/RL104/RL105 bait in the fixture must NOT fire here
+    assert _run_as(tmp_path, name, "src/repro/training") == []
+
+
+@pytest.mark.parametrize("rel_dir", ["src/repro/obs", "src/repro/launch"])
+def test_clock_providers_are_allowlisted(tmp_path, rel_dir):
+    assert _run_as(tmp_path, "bad_clock_boundary.py", rel_dir) == []
+
+
+def test_full_scope_dirs_flag_same_reads_as_rl101(tmp_path):
+    findings = _run_as(tmp_path, "bad_clock_boundary.py",
+                       "src/repro/serving")
+    assert {f.rule for f in findings} == {"RL101"}
+    assert {f.line for f in findings} == \
+        {line for line, _ in expected_markers(
+            FIXTURES / "bad_clock_boundary.py")}
+
+
+def test_wallclock_scope_dispatch():
+    from repro.analysis.determinism import wallclock_scope
+    assert wallclock_scope("src/repro/serving/engine.py") == "full"
+    assert wallclock_scope("src/repro/core/gate.py") == "full"
+    assert wallclock_scope("tests/fixtures/analysis/x.py") == "full"
+    assert wallclock_scope("src/repro/obs/tracer.py") == "allow"
+    assert wallclock_scope("src/repro/launch/serve.py") == "allow"
+    assert wallclock_scope("src/repro/training/loop.py") == "boundary"
+    assert wallclock_scope("src/repro/models/model.py") == "boundary"
+    assert wallclock_scope("src/repro/analysis/runner.py") == "boundary"
 
 
 def test_findings_carry_hints_and_severity():
