@@ -113,6 +113,15 @@ def _toolgraph_metrics(d):
     }
 
 
+def _retrieval_metrics(d):
+    return {
+        "token_savings_512": d["meta"]["token_savings_512"],
+        "recall_at_k": d["meta"]["recall_at_k"],
+        "outcomes_identical": d["meta"]["outcomes_identical"],
+        "quality_identical": d["meta"]["quality_identical"],
+    }
+
+
 # (direction, relative tolerance) per metric; see the module docstring
 SPECS = {
     "engine": (_engine_metrics, {
@@ -159,6 +168,15 @@ SPECS = {
         "quality_identical": ("equal", 0.0),
         "fused_parity": ("equal", 0.0),
         "world_unchanged": ("equal", 0.0),
+    }),
+    "retrieval": (_retrieval_metrics, {
+        # the headline: tokens saved by retrieved-toolset exposure at
+        # the 512-tool catalog (includes miss-and-widen overhead)
+        "token_savings_512": ("higher", 0.05),
+        "recall_at_k": ("higher", 0.05),
+        # invariant: retrieval must never change a task outcome
+        "outcomes_identical": ("equal", 0.0),
+        "quality_identical": ("equal", 0.0),
     }),
 }
 

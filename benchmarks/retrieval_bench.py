@@ -1,0 +1,231 @@
+"""Tool-retrieval benchmark: prompt-token savings from exposing a
+retrieved top-k toolset instead of the full catalog, at catalog sizes
+8 → 512, with task outcomes asserted bitwise identical.
+
+The retrieval layer (core/catalog.py + core/retriever.py) scales the
+registry to hundreds of tools and serializes only the per-query
+retrieved toolset into the planner prompt; the gate still decides the
+behaviour model's ``visible`` toolset, so the planner's decision stream
+— and therefore every task outcome — cannot change (DESIGN.md §Tool
+retrieval). The bench measures the two things retrieval is allowed to
+move and the one thing it must not:
+
+  1. tokens: total tokens per task, retrieved vs all-tools-exposed, at
+     each catalog size (the miss-and-widen escalations are charged to
+     the retrieved cell, so the savings number is honest);
+  2. recall@k: how much of each task's actually-executed toolset was in
+     the initially retrieved top-k (misses are what widening pays for);
+  3. outcomes: executed tool sequence, completion, steps, fallbacks and
+     the workspace rng state must be BITWISE IDENTICAL per task across
+     the two cells — asserted, and CI-gated via check_regression.py
+     ``SPECS["retrieval"]``.
+
+Writes results/retrieval_bench.{json,md}.
+
+  PYTHONPATH=src python benchmarks/retrieval_bench.py [--tiny] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+SIZES = (8, 32, 128, 512)
+
+COLUMNS = ("n_tools", "exposure", "correct", "success", "det_f1",
+           "lcc_r", "rouge_l", "tokens_per_task", "widens_per_task",
+           "recall_at_k")
+
+QUALITY = ("correct", "success", "det_f1", "lcc_r", "rouge_l")
+
+
+def _outcome_fingerprint(r):
+    """Everything a task outcome is: tool stream, completion, step and
+    fallback structure, and the workspace's terminal state including
+    its rng stream position."""
+    ws = r.workspace
+    return (tuple(r.executed_tools), r.completed_plan, r.fallback_used,
+            r.intent_predicted, r.steps, tuple(ws.handles),
+            ws.last_answer, str(ws.rng.bit_generator.state))
+
+
+def _cell(world, tasks, registry, imap, intent_libs, exposure, seed, k):
+    """Run one (catalog size × exposure mode) cell sequentially."""
+    import numpy as np
+    from repro.core.agent import Agent
+    from repro.core.gate import IntentGate, ScriptedIntentClassifier
+    from repro.core.planner import PlannerConfig
+    from repro.core.retriever import ToolRetriever
+    from repro.env.evaluator import evaluate_results
+
+    gate = IntentGate(imap,
+                      ScriptedIntentClassifier(
+                          0.97, np.random.default_rng(seed)),
+                      registry.libraries())
+    retriever = (ToolRetriever(registry, intent_libs, k=k)
+                 if exposure == "retrieved" else None)
+    agent = Agent(registry, world,
+                  PlannerConfig(mode="react", few_shot=False),
+                  gate=gate, seed=seed, retriever=retriever,
+                  exposure=exposure)
+    results = [agent.run_task(t, task_seed=i)
+               for i, t in enumerate(tasks)]
+    rep = evaluate_results(results, f"{exposure}-{len(registry.tools)}")
+    n = max(len(results), 1)
+    recalls = []
+    for r in results:
+        used = {t for t in r.executed_tools}
+        if r.toolset is None or not used:
+            recalls.append(1.0)
+        else:
+            exposed = set(r.toolset)
+            recalls.append(len(used & exposed) / len(used))
+    row = {
+        "n_tools": len(registry.tools),
+        "exposure": exposure,
+        "correct": round(rep.correct_rate, 6),
+        "success": round(rep.success_rate, 6),
+        "det_f1": round(rep.det_f1, 6),
+        "lcc_r": round(rep.lcc_r, 6),
+        "rouge_l": round(rep.vqa_rouge_l, 6),
+        "tokens_per_task": round(rep.tokens_per_task, 3),
+        "widens_per_task": round(sum(r.widens for r in results) / n, 4),
+        "recall_at_k": round(sum(recalls) / n, 4),
+    }
+    return row, results
+
+
+def bench(tiny: bool = False, k: int = 16):
+    from repro.core.catalog import (build_catalog,
+                                    catalog_intent_libraries,
+                                    catalog_intent_map)
+    from repro.env.tasks import make_benchmark
+    from repro.env.world import build_world
+
+    seed = 0
+    n_tasks = 12 if tiny else 64
+    world = build_world(seed)
+    tasks = make_benchmark(world, n_tasks, seed=seed)
+
+    rows = []
+    savings = {}
+    recalls = {}
+    outcomes_identical = True
+    quality_identical = True
+    for n in SIZES:
+        registry = build_catalog(n, seed=0)
+        imap = catalog_intent_map(registry)
+        intent_libs = catalog_intent_libraries(registry)
+        row_all, res_all = _cell(world, tasks, registry, imap,
+                                 intent_libs, "all", seed, k)
+        row_ret, res_ret = _cell(world, tasks, registry, imap,
+                                 intent_libs, "retrieved", seed, k)
+        rows += [row_all, row_ret]
+        for a, b in zip(res_all, res_ret):
+            if _outcome_fingerprint(a) != _outcome_fingerprint(b):
+                outcomes_identical = False
+        if any(row_all[q] != row_ret[q] for q in QUALITY):
+            quality_identical = False
+        savings[n] = round(
+            1 - row_ret["tokens_per_task"]
+            / max(row_all["tokens_per_task"], 1e-9), 4)
+        recalls[n] = row_ret["recall_at_k"]
+
+    meta = {
+        "tiny": tiny, "n_tasks": n_tasks, "sizes": list(SIZES),
+        "retriever_k": k,
+        "token_savings": {str(n): savings[n] for n in SIZES},
+        "token_savings_512": savings[512],
+        "recall_at_k": round(sum(recalls.values()) / len(recalls), 4),
+        "outcomes_identical": outcomes_identical,
+        "quality_identical": quality_identical,
+    }
+    if not outcomes_identical:
+        raise AssertionError(
+            "retrieved-toolset exposure changed a task outcome — "
+            "retrieval may only narrow the serialized catalog, never "
+            "the behaviour model's visible toolset")
+    if not quality_identical:
+        raise AssertionError(
+            "quality metrics moved between all-tools and retrieved "
+            "exposure — they must be identical by construction")
+    if savings[512] <= 0.15:
+        raise AssertionError(
+            f"token savings at 512 tools is {savings[512]} <= 0.15 — "
+            f"retrieval is not paying for its widening overhead at the "
+            f"catalog scale it exists for")
+    return rows, meta
+
+
+def write_results(rows, meta, path=None):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    md = ["# retrieval_bench — retrieved-toolset prompt exposure",
+          "",
+          f"{meta['n_tasks']} tasks, react zero-shot, gate accuracy "
+          f"0.97, retriever k={meta['retriever_k']}; each catalog size "
+          f"compares all-tools-exposed vs the retrieved top-k toolset, "
+          f"with miss-and-widen escalations charged to the retrieved "
+          f"cell.", "",
+          "| " + " | ".join(COLUMNS) + " |",
+          "|" + "---|" * len(COLUMNS)]
+    for r in rows:
+        md.append("| " + " | ".join(str(r[c]) for c in COLUMNS) + " |")
+    md += ["",
+           "- token savings by catalog size: "
+           + ", ".join(f"{n}: **{100 * meta['token_savings'][str(n)]:.1f}%**"
+                       for n in meta["sizes"]),
+           f"- mean recall@k of the initially exposed toolset: "
+           f"**{meta['recall_at_k']}**",
+           f"- task outcomes bitwise identical across exposure modes: "
+           f"**{meta['outcomes_identical']}** (quality identical: "
+           f"{meta['quality_identical']})",
+           "",
+           "Interpretation: the serialized catalog dominates prompt "
+           "tokens as the registry grows; retrieval caps it at k tool "
+           "schemas per request. Savings are ~0 at 8 tools (k covers "
+           "the catalog — retrieval is a no-op by design) and grow "
+           "with catalog size. The planner's decision stream reads the "
+           "gated visible toolset, not the serialized text, so the "
+           "retrieved cell replays the all-tools cell bitwise; misses "
+           "only cost widen re-serializations, which the savings "
+           "numbers already include."]
+    with open(os.path.join(RESULTS_DIR, "retrieval_bench.md"), "w") as f:
+        f.write("\n".join(md) + "\n")
+    out_json = path or os.path.join(RESULTS_DIR, "retrieval_bench.json")
+    with open(out_json, "w") as f:
+        json.dump({"meta": meta, "rows": rows}, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke config (12 tasks)")
+    ap.add_argument("--retriever-k", type=int, default=16,
+                    help="retrieved toolset size (top-k)")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON here instead of results/ "
+                         "(markdown is skipped); used by the CI "
+                         "bench-regression gate")
+    args = ap.parse_args()
+    rows, meta = bench(tiny=args.tiny, k=args.retriever_k)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"meta": meta, "rows": rows}, f, indent=1)
+    elif not args.tiny:
+        write_results(rows, meta)
+    for r in rows:
+        print(f"n={r['n_tools']:3d} {r['exposure']:9s} "
+              f"tok/task={r['tokens_per_task']:9.1f} "
+              f"widens/task={r['widens_per_task']:6.3f} "
+              f"recall={r['recall_at_k']:.4f} "
+              f"success={r['success']:.4f}")
+    print(f"token_savings_512={meta['token_savings_512']} "
+          f"recall_at_k={meta['recall_at_k']} "
+          f"outcomes_identical={meta['outcomes_identical']}")
+    return rows, meta
+
+
+if __name__ == "__main__":
+    main()

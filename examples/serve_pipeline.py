@@ -24,9 +24,12 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.agent import Agent
+from repro.core.catalog import (build_catalog, catalog_intent_libraries,
+                                catalog_intent_map)
 from repro.core.gate import IntentGate
-from repro.core.intents import build_intent_map
+from repro.core.intents import INTENTS, build_intent_map
 from repro.core.planner import PlannerConfig
+from repro.core.retriever import ToolRetriever
 from repro.core.tools import DEFAULT_REGISTRY
 from repro.env.evaluator import evaluate_results
 from repro.env.tasks import make_benchmark
@@ -79,6 +82,15 @@ def main():
                     choices=("fifo", "slack"),
                     help="admission-queue order: arrival or earliest "
                          "SLA deadline first")
+    ap.add_argument("--catalog-size", type=int, default=None,
+                    help="serve a generated tool catalog of N tools "
+                         "(core/catalog.py; default: the base "
+                         "registry)")
+    ap.add_argument("--retriever-k", type=int, default=None,
+                    help="expose only the retrieved top-k toolset per "
+                         "request (core/retriever.py) instead of the "
+                         "gated library catalog; sessions retrieving "
+                         "the same toolset share one engine prefix")
     ap.add_argument("--trace-out", default="",
                     help="write the unified pipeline+engine trace here "
                          "(.jsonl = record-per-line, anything else = "
@@ -90,6 +102,10 @@ def main():
     if args.prefill_budget is not None and args.prefill_budget < 1:
         ap.error(f"--prefill-budget must be >= 1, "
                  f"got {args.prefill_budget}")
+    if args.catalog_size is not None and args.catalog_size < 1:
+        ap.error(f"--catalog-size must be >= 1, got {args.catalog_size}")
+    if args.retriever_k is not None and args.retriever_k < 1:
+        ap.error(f"--retriever-k must be >= 1, got {args.retriever_k}")
 
     # --- the serving fleet: engine(s) + one batched gate model -----------
     cfg = get_smoke_config("planner-proxy-100m")
@@ -103,11 +119,13 @@ def main():
     from repro.obs import Tracer
     tracer = Tracer() if args.trace_out else None
     # cache_len must hold the longest per-intent planner prefix (~2.5k
-    # tokens of system prompt + catalog) plus the turn suffix
+    # tokens of system prompt + catalog) plus the turn suffix; generated
+    # catalogs serialize wider gated-library subsets, so give them room
+    cache_len = 8192 if (args.catalog_size or 0) > 48 else 4096
     if args.replicas > 1:
         engine = EngineCluster(cfg, params, args.replicas,
                                router=args.router, max_batch=4,
-                               cache_len=4096, backend=args.backend,
+                               cache_len=cache_len, backend=args.backend,
                                kv_mode=args.kv_mode,
                                kv_blocks=args.kv_blocks,
                                block_size=args.block_size,
@@ -117,7 +135,7 @@ def main():
                                tracer=tracer)
     else:
         engine = InferenceEngine(cfg, params, max_batch=4,
-                                 cache_len=4096, backend=args.backend,
+                                 cache_len=cache_len, backend=args.backend,
                                  kv_mode=args.kv_mode,
                                  kv_blocks=args.kv_blocks,
                                  block_size=args.block_size,
@@ -133,11 +151,26 @@ def main():
     # --- the platform ----------------------------------------------------
     world = build_world(0)
     tasks = make_benchmark(world, args.requests)
-    imap = build_intent_map(make_benchmark(world, 64), DEFAULT_REGISTRY)
-    gate = IntentGate(imap, classifier, DEFAULT_REGISTRY.libraries())
-    agent = Agent(DEFAULT_REGISTRY, world,
+    if args.catalog_size is not None:
+        registry = build_catalog(args.catalog_size, seed=0)
+        imap = catalog_intent_map(registry)
+    else:
+        registry = DEFAULT_REGISTRY
+        imap = build_intent_map(make_benchmark(world, 64), registry)
+    gate = IntentGate(imap, classifier, registry.libraries())
+    retriever = None
+    exposure = "gated"
+    if args.retriever_k is not None:
+        retriever = ToolRetriever(registry,
+                                  catalog_intent_libraries(registry),
+                                  k=args.retriever_k)
+        exposure = "retrieved"
+        print(f"toolset retrieval on: top-{args.retriever_k} of "
+              f"{len(registry.tools)} tools exposed per request")
+    agent = Agent(registry, world,
                   PlannerConfig(mode="react", few_shot=False),
-                  gate=gate, seed=0)
+                  gate=gate, seed=0, retriever=retriever,
+                  exposure=exposure)
 
     # --- run everything through the concurrent pipeline ------------------
     pipe = GeckOptPipeline(
@@ -156,7 +189,7 @@ def main():
     mgb = ps["mean_gate_batch"]          # None when no wave ran
     print(f"gate:    {ps['gate_batches']} batched calls, mean wave "
           f"{'n/a' if mgb is None else f'{mgb:.1f}'} queries "
-          f"(vs {8*len(results)} B=1 forwards sequentially)")
+          f"(vs {len(INTENTS)*len(results)} B=1 forwards sequentially)")
     print(f"engine:  {ps['engine_turns']} planner turns over "
           f"{len(engine.prefixes)} intent prefixes — "
           f"{es['prefix_hits']} prefix hits, "
@@ -167,6 +200,10 @@ def main():
           + (f" | shared-block frac {es['kv_shared_frac']:.2f}, "
              f"{es['preemptions']} preemptions"
              if es["kv_mode"] == "paged" else ""))
+    if args.retriever_k is not None:
+        print(f"retrieve: {ps['retrievals']} toolsets retrieved "
+              f"(top-{args.retriever_k}), "
+              f"{ps['retrieval_widens']} miss-and-widen escalations")
     if args.spec_decode:
         print(f"spec-decode[k={args.draft_k}]: "
               f"{es['tokens_per_step']:.2f} tokens/target-forward, "

@@ -38,6 +38,13 @@ The attr→resource map and read-only attr set come from module literals
 analyzed file defines them (env/tools_impl.py does), else from the
 defaults mirrored here — so the analyzer runs unchanged on fixture
 corpora.
+
+The sweep is parameterized over (effects table, dispatch key): the base
+pass checks ``TOOL_EFFECTS`` against the ``name``-keyed dispatch, and a
+second pass (analysis/runner.py) checks ``CATALOG_FAMILY_EFFECTS``
+against the ``family``-keyed dispatch covering every generated catalog
+family (core/catalog.py) — so scaling the catalog cannot open effects
+coverage gaps.
 """
 from __future__ import annotations
 
@@ -61,6 +68,12 @@ _DEFAULT_READONLY = {"world", "temperature"}
 
 #: names of workspace methods that touch no hazard resource
 _WS_PURE_METHODS = {"obs"}
+
+#: second-parameter names that mark a module function as a dispatch
+#: function rather than a summarizable helper — one per effects table
+#: ("name": TOOL_EFFECTS base pass; "family": CATALOG_FAMILY_EFFECTS
+#: generated-catalog pass)
+_DISPATCH_PARAMS = ("name", "family")
 
 
 @dataclass
@@ -241,9 +254,9 @@ class HandlerInfo:
     effects: InferredEffects
 
 
-def _declared_effects(tree: ast.Module) -> Dict[str, Tuple[Set[str],
-                                                           Set[str], int]]:
-    """Parse the ``TOOL_EFFECTS = {...}`` literal: tool -> (reads,
+def _declared_effects(tree: ast.Module, table_name: str = "TOOL_EFFECTS"
+                      ) -> Dict[str, Tuple[Set[str], Set[str], int]]:
+    """Parse the ``<table_name> = {...}`` literal: tool -> (reads,
     writes, line). Supports the ``_eff(reads=..., writes=...)`` helper
     and direct ``ToolEffects(frozenset(...), frozenset(...))`` calls."""
     out: Dict[str, Tuple[Set[str], Set[str], int]] = {}
@@ -252,7 +265,7 @@ def _declared_effects(tree: ast.Module) -> Dict[str, Tuple[Set[str],
             continue
         targets = node.targets if isinstance(node, ast.Assign) \
             else [node.target]
-        if not any(isinstance(t, ast.Name) and t.id == "TOOL_EFFECTS"
+        if not any(isinstance(t, ast.Name) and t.id == table_name
                    for t in targets):
             continue
         value = node.value
@@ -298,16 +311,18 @@ def _declared_effects(tree: ast.Module) -> Dict[str, Tuple[Set[str],
     return out
 
 
-def _dispatch_functions(tree: ast.Module) -> List[ast.FunctionDef]:
+def _dispatch_functions(tree: ast.Module, name_param: str = "name"
+                        ) -> List[ast.FunctionDef]:
     """Dispatch functions: module-level defs whose params look like
-    ``(ws-like, name, args)`` — we key on a first param named ``ws``
-    (or annotated Workspace) and a second param named ``name``."""
+    ``(ws-like, <name_param>, ...)`` — we key on a first param named
+    ``ws`` (or annotated Workspace) and a second param matching the
+    pass's dispatch key (``name`` or ``family``)."""
     out = []
     for node in tree.body:
         if not isinstance(node, ast.FunctionDef):
             continue
         params = [a.arg for a in node.args.args]
-        if len(params) >= 2 and params[1] == "name" and (
+        if len(params) >= 2 and params[1] == name_param and (
                 params[0] == "ws" or _annotated_workspace(node.args.args[0])):
             out.append(node)
     return out
@@ -331,18 +346,29 @@ def _helper_summaries(tree: ast.Module, attr_map: Dict[str, str],
         if not isinstance(node, ast.FunctionDef):
             continue
         params = [a.arg for a in node.args.args]
-        if params and params[0] == "ws" and params[1:2] != ["name"]:
+        # a dispatch function (second param is a dispatch key) must not
+        # be summarized as a helper: inlining its union-of-branches at
+        # a call site would attribute every family's effects to the
+        # calling tool
+        if (params and params[0] == "ws"
+                and (len(params) < 2
+                     or params[1] not in _DISPATCH_PARAMS)):
             out[node.name] = _infer(node.body, "ws", attr_map, readonly, {})
     return out
 
 
 def analyze_effects(path: Path, source: str,
-                    registry_names: Optional[Sequence[str]] = None
-                    ) -> List[Finding]:
+                    registry_names: Optional[Sequence[str]] = None,
+                    table_name: str = "TOOL_EFFECTS",
+                    name_param: str = "name") -> List[Finding]:
     """Run RL001–RL005 over one tools-impl-shaped file.
 
     ``registry_names``: when given (the real repo run passes the
     catalog), RL004 also checks registry ⇔ effects-table coverage.
+    ``table_name``/``name_param`` select the pass: the default checks
+    ``TOOL_EFFECTS`` against the ``name``-keyed dispatch; the
+    generated-catalog pass checks ``CATALOG_FAMILY_EFFECTS`` against
+    the ``family``-keyed dispatch.
     """
     findings: List[Finding] = []
     tree = ast.parse(source)
@@ -368,11 +394,11 @@ def analyze_effects(path: Path, source: str,
                 except (ValueError, TypeError):
                     pass
 
-    declared = _declared_effects(tree)
+    declared = _declared_effects(tree, table_name)
     helpers = _helper_summaries(tree, attr_map, readonly)
 
     handlers: List[HandlerInfo] = []
-    for fn in _dispatch_functions(tree):
+    for fn in _dispatch_functions(tree, name_param):
         ws_name = fn.args.args[0].arg
         name_arg = fn.args.args[1].arg
         for stmt in ast.walk(fn):
@@ -413,7 +439,7 @@ def analyze_effects(path: Path, source: str,
         if tool not in declared:
             findings.append(make_finding(
                 "RL004", path, line,
-                f"tool {tool!r} has a handler but no TOOL_EFFECTS entry",
+                f"tool {tool!r} has a handler but no {table_name} entry",
                 "add an entry; unknown tools fail graph compilation"))
             continue
         dr, dw, dline = declared[tool]
@@ -422,7 +448,7 @@ def analyze_effects(path: Path, source: str,
                 "RL001", path, eff.write_line.get(res, line),
                 f"tool {tool!r} writes {res!r} but declares writes="
                 f"{sorted(dw)}",
-                "declare the write in TOOL_EFFECTS: undeclared writes "
+                f"declare the write in {table_name}: undeclared writes "
                 "race inside execute_graph_batch waves"))
         for res in sorted(eff.reads - (dr | dw)):
             findings.append(make_finding(
@@ -449,7 +475,7 @@ def analyze_effects(path: Path, source: str,
     for tool in sorted(set(declared) - handled_tools):
         findings.append(make_finding(
             "RL004", path, declared[tool][2],
-            f"TOOL_EFFECTS entry {tool!r} has no handler branch",
+            f"{table_name} entry {tool!r} has no handler branch",
             "remove the dead entry or add the handler"))
 
     if registry_names is not None and declared:
@@ -457,13 +483,13 @@ def analyze_effects(path: Path, source: str,
         for tool in sorted(reg - set(declared)):
             findings.append(make_finding(
                 "RL004", path, 1,
-                f"registry tool {tool!r} missing from TOOL_EFFECTS",
+                f"registry tool {tool!r} missing from {table_name}",
                 "every catalog tool needs an effects entry for hazard "
                 "inference"))
         for tool in sorted(set(declared) - reg):
             findings.append(make_finding(
                 "RL004", path, declared[tool][2],
-                f"TOOL_EFFECTS entry {tool!r} not in the tool registry",
+                f"{table_name} entry {tool!r} not in the tool registry",
                 "remove the dead entry or register the tool"))
 
     return findings

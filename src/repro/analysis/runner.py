@@ -76,6 +76,20 @@ def analyze_file(path: Path, root: Path,
     if path.name == "tools_impl.py" or has_effects_table:
         out.extend(analyze_effects(Path(rel), source,
                                    registry_names=registry_names))
+    # generated-catalog pass: the family-keyed dispatch must cover the
+    # CATALOG_FAMILY_EFFECTS table (and vice versa) so growing the
+    # catalog can't open an effects coverage gap
+    if any(ln.startswith("CATALOG_FAMILY_EFFECTS")
+           for ln in source.splitlines()):
+        try:
+            from repro.core.catalog import FAMILY_NAMES
+            family_names: Optional[Sequence[str]] = FAMILY_NAMES
+        except Exception:
+            family_names = None
+        out.extend(analyze_effects(Path(rel), source,
+                                   registry_names=family_names,
+                                   table_name="CATALOG_FAMILY_EFFECTS",
+                                   name_param="family"))
     if _is_kernel_impl(path, source):
         out.extend(analyze_kernels(Path(rel), source))
     return out

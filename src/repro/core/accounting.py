@@ -20,7 +20,7 @@ from repro.serving.tokenizer import count_tokens
 
 @dataclass
 class LedgerEntry:
-    kind: str              # "gate" | "plan"
+    kind: str              # "gate" | "plan" | "widen"
     prompt_tokens: int
     completion_tokens: int
     tool_calls: int = 0    # tool calls emitted in this round-trip
@@ -82,6 +82,16 @@ class TokenLedger:
         return sum(e.prompt_tokens for e in self.entries
                    if e.kind == "plan")
 
+    # toolset-retrieval miss-and-widen accounting ------------------------
+    @property
+    def n_widens(self) -> int:
+        """Miss-and-widen re-issues: a "widen" entry is one k-escalation
+        re-serialization after the planner emitted a call outside the
+        retrieved toolset (TOOL_NOT_RETRIEVED). Widen entries carry
+        tokens (total_tokens includes them) but zero virtual steps, so
+        they never move round-trip or step metrics."""
+        return sum(1 for e in self.entries if e.kind == "widen")
+
     def summary(self) -> Dict[str, float]:
         return {"total_tokens": self.total_tokens,
                 "prompt_tokens": self.prompt_tokens,
@@ -91,4 +101,5 @@ class TokenLedger:
                 "round_trips": self.n_round_trips,
                 "virtual_steps": self.n_virtual_steps,
                 "tool_calls": self.n_tool_calls,
-                "plan_prompt_tokens": self.plan_prompt_tokens}
+                "plan_prompt_tokens": self.plan_prompt_tokens,
+                "widens": self.n_widens}

@@ -37,7 +37,9 @@ from repro.core.accounting import TokenLedger
 from repro.core.gate import IntentGate
 from repro.core.planner import (CompiledStep, PlannerConfig, PlanStep,
                                 ScriptedPlanner)
+from repro.core.retriever import ToolRetriever, ToolsetExposure
 from repro.core.tools import Tool, ToolRegistry
+from repro.obs import NULL_TRACER
 from repro.env.tasks import Task
 from repro.env.tools_impl import (NodeObservation, ToolError, Workspace,
                                   execute_graph, execute_tool)
@@ -54,6 +56,8 @@ class TaskResult:
     intent_predicted: Optional[str]
     steps: int
     executed_tools: List[str] = field(default_factory=list)
+    toolset: Optional[Tuple[str, ...]] = None  # initially exposed toolset
+    widens: int = 0                            # miss-and-widen escalations
 
 
 @dataclass
@@ -79,6 +83,8 @@ class AgentSession:
     #                             compilation cannot change which calls
     #                             the behaviour model gets to make
     index: int = 0              # arrival order (pipeline bookkeeping)
+    exposure: Optional[ToolsetExposure] = None  # retrieved-toolset state
+    exposed_initial: Optional[Tuple[str, ...]] = None
 
     def result(self) -> TaskResult:
         return TaskResult(task=self.task, workspace=self.workspace,
@@ -86,18 +92,40 @@ class AgentSession:
                           completed_plan=self.completed,
                           fallback_used=self.fallback_used,
                           intent_predicted=self.intent, steps=self.steps,
-                          executed_tools=self.executed)
+                          executed_tools=self.executed,
+                          toolset=self.exposed_initial,
+                          widens=(self.exposure.widens
+                                  if self.exposure else 0))
 
 
 class Agent:
     def __init__(self, registry: ToolRegistry, world: World,
                  planner_cfg: PlannerConfig,
-                 gate: Optional[IntentGate] = None, seed: int = 0):
+                 gate: Optional[IntentGate] = None, seed: int = 0,
+                 retriever: Optional[ToolRetriever] = None,
+                 exposure: str = "gated", tracer=NULL_TRACER):
+        """``exposure`` picks what the serialized prompt catalog holds:
+
+          * ``"gated"`` — the gate's library subset (the seed behaviour);
+          * ``"all"`` — the full catalog text regardless of gating (the
+            retrieval bench's baseline cell);
+          * ``"retrieved"`` — the retriever's top-k toolset, widened
+            deterministically on TOOL_NOT_RETRIEVED misses.
+
+        ``visible`` — the behaviour model's input — is gate-driven in
+        every mode, which is why task outcomes are bitwise identical
+        across modes (DESIGN.md §Tool retrieval)."""
+        assert exposure in ("gated", "all", "retrieved"), exposure
+        if exposure == "retrieved" and retriever is None:
+            raise ValueError("exposure='retrieved' needs a retriever")
         self.registry = registry
         self.world = world
         self.planner_cfg = planner_cfg
         self.gate = gate
         self.seed = seed
+        self.retriever = retriever
+        self.exposure = exposure
+        self.tracer = tracer
 
     # ------------------------------------------------------- session API ----
     def start_session(self, task: Task, task_seed: int = 0) -> AgentSession:
@@ -116,18 +144,43 @@ class Agent:
 
     def apply_gate_result(self, session: AgentSession, intent: str,
                           libs: Tuple[str, ...]):
-        """Install an (already ledger-charged) gate decision."""
+        """Install an (already ledger-charged) gate decision. ``visible``
+        always narrows to the gated libraries; the serialized catalog
+        only follows in ``"gated"`` exposure mode (``"all"`` keeps the
+        full text, ``"retrieved"`` is set by apply_retrieval_result)."""
         session.intent = intent
         session.visible = {t.name: t
                            for t in self.registry.by_library(libs)}
-        session.catalog = self.registry.catalog_text(libs)
+        if self.exposure == "gated":
+            session.catalog = self.registry.catalog_text(libs)
         session.gated = True
+
+    def apply_retrieval_result(self, session: AgentSession,
+                               exposure: ToolsetExposure):
+        """Install an already-computed retrieval: the session's prompt
+        catalog becomes the exposed top-k toolset text."""
+        session.exposure = exposure
+        session.exposed_initial = exposure.exposed
+        session.catalog = exposure.catalog_text(self.registry)
+        self.tracer.event("toolset_retrieved", tick=0, lane="retrieve",
+                          session=session.index, k=exposure.k,
+                          key=exposure.key_str)
+
+    def retrieve_session(self, session: AgentSession):
+        """Single-query retrieval (the sequential path; the pipeline
+        retrieves whole admission waves in one batched scoring call)."""
+        if self.exposure != "retrieved":
+            return
+        self.apply_retrieval_result(
+            session,
+            self.retriever.retrieve(session.task.query, session.intent))
 
     def gate_session(self, session: AgentSession):
         """Single-query gate call (the sequential path)."""
         if self.gate is not None:
             intent, libs = self.gate(session.task.query, session.ledger)
             self.apply_gate_result(session, intent, libs)
+        self.retrieve_session(session)
 
     def plan_step(self, session: AgentSession):
         """One planner LLM round-trip: serialize the prompt, draw the
@@ -154,6 +207,32 @@ class Agent:
                         virtual_steps=(step.n_virtual
                                        if isinstance(step, CompiledStep)
                                        else 1))
+        if s.exposure is not None and not step.tool_not_found:
+            # TOOL_NOT_RETRIEVED miss-and-widen: the behaviour model may
+            # emit a call outside the exposed toolset (it plans over
+            # ``visible``, not the serialized catalog). Deterministically
+            # double k until the calls are covered, charging each
+            # re-serialization as a "widen" ledger entry (zero virtual
+            # steps: round-trip metrics stay invariant). The loop bound
+            # also terminates when a call is outside the FULL ranking
+            # (truncated catalogs) — execution then raises the same
+            # ToolError it would with all tools exposed.
+            calls = (step.graph.nodes if isinstance(step, CompiledStep)
+                     else step.calls)
+            tools = {c.tool for c in calls}
+            exp = s.exposure
+            while (tools and not exp.covers(tools)
+                   and exp.k < len(exp.ranking)):
+                exp.widen_once()
+                s.catalog = exp.catalog_text(self.registry)
+                s.ledger.record(
+                    "widen",
+                    s.planner.serialize_prompt(s.task, s.catalog,
+                                               s.history),
+                    s.planner.serialize_completion(step))
+                self.tracer.event("toolset_widen", tick=s.steps,
+                                  lane="retrieve", session=s.index,
+                                  k=exp.k)
         return step
 
     def execute_step(self, session: AgentSession, step
@@ -193,7 +272,15 @@ class Agent:
             # GeckOpt fallback: revert to the full toolset
             s.fallback_used = True
             s.visible = dict(self.registry.tools)
-            s.catalog = self.registry.catalog_text()
+            if s.exposure is not None:
+                # jump the exposure straight to the full catalog (not a
+                # retrieval miss — the gate was wrong, not the retriever);
+                # at k == n the exposed text is byte-identical to
+                # registry.catalog_text(), keeping the fallback exact
+                s.exposure.widen_full()
+                s.catalog = s.exposure.catalog_text(self.registry)
+            else:
+                s.catalog = self.registry.catalog_text()
             s.planner.note_fallback()
             s.history.append("Observation: TOOL_NOT_FOUND — reverting to "
                              "the full tool catalog.")

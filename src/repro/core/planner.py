@@ -22,7 +22,7 @@ import numpy as np
 from repro.core.toolgraph import ToolGraph, compile_calls
 from repro.core.tools import Tool, ToolRegistry
 from repro.env.tasks import Task, ToolCall
-from repro.env.tools_impl import TOOL_EFFECTS
+from repro.env.tools_impl import tool_effects
 
 SYSTEM_PROMPT = (
     "You are the planning agent of the GeoLLM-Engine geospatial Copilot "
@@ -376,7 +376,7 @@ class ScriptedPlanner:
                 break
             calls.extend(step.calls)
             n_virtual += 1
-        graph = compile_calls(calls, TOOL_EFFECTS)
+        graph = compile_calls(calls, tool_effects)
         return CompiledStep(thought, graph, final=final,
                             tool_not_found=tool_not_found,
                             n_virtual=n_virtual)

@@ -124,7 +124,9 @@ def _t(name, lib, desc, params, returns="object"):
 
 
 def build_default_registry() -> ToolRegistry:
-    """The platform's full catalog: 12 libraries, 48 tools."""
+    """The platform's hand-written base catalog (docstring counts are
+    derived below — see N_TOOLS/N_LIBRARIES — so they can never go
+    stale as tools are added)."""
     r = ToolRegistry()
     P = lambda *ps: list(ps)
 
@@ -356,3 +358,14 @@ def build_default_registry() -> ToolRegistry:
 
 
 DEFAULT_REGISTRY = build_default_registry()
+
+#: registry counts, derived — the hand-maintained "12 libraries, 48
+#: tools" literals this module (and the intents/serving docstrings)
+#: used to carry went stale the moment the catalog grew; anything that
+#: needs the numbers reads these
+N_TOOLS = len(DEFAULT_REGISTRY.tools)
+N_LIBRARIES = len(DEFAULT_REGISTRY.libraries())
+build_default_registry.__doc__ = (
+    f"The platform's base catalog: {N_LIBRARIES} libraries, "
+    f"{N_TOOLS} tools (counts derived from the registry itself; "
+    f"core/catalog.py scales past this with generated families).")

@@ -27,8 +27,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.catalog import FAMILIES, family_of
 from repro.core.toolgraph import ToolEffects, WORKSPACE_RESOURCES
-from repro.core.tools import DEFAULT_REGISTRY, validate_effects
+from repro.core.tools import DEFAULT_REGISTRY, ToolRegistry, validate_effects
 from repro.env.world import LANDCOVER_CLASSES, World
 
 
@@ -293,7 +294,93 @@ def execute_tool(ws: Workspace, name: str, args: Dict[str, Any]) -> str:
         ws.artifacts.append({"op": "tabulate"})
         return ws.obs({"table": "rendered"})
 
+    # generated-catalog tools (core/catalog.py) dispatch by family: one
+    # real handler per family, uniform CATALOG_FAMILY_EFFECTS footprint
+    family = family_of(name)
+    if family is not None:
+        return _execute_family(ws, family, name, args)
+
     raise ToolError(f"unknown tool: {name}")
+
+
+def _execute_family(ws: Workspace, family: str, name: str,
+                    args: Dict[str, Any]) -> str:
+    """Dispatch for generated catalog tools (core/catalog.py): every
+    member of a family shares one handler and one effects footprint
+    (``CATALOG_FAMILY_EFFECTS[family]``), varying deterministically by
+    tool name — no wall clock, no unseeded randomness, and only the
+    declared workspace resources are touched (the family-table pass of
+    the effects race detector checks this statically)."""
+    w = ws.world
+    if family == "catalogue":
+        # pure metadata lookup — mirrors SQL_apis: no workspace effects
+        rows = w.catalog_rows()
+        n = sum(ord(c) for c in name) % 7 + 3
+        meta = [{"id": r.image_id, "sensor": r.sensor} for r in rows[:n]]
+        return ws.obs({"partition": name, "count": len(meta),
+                       "rows": meta})
+    if family == "ingest":
+        hs = args.get("handles") or ws.handles
+        if not hs:
+            raise ToolError(f"{name}: workspace empty")
+        keep = [h for h in hs if h in w.images]
+        ws.handles = list(dict.fromkeys(keep))
+        return ws.obs({"op": name, "handles": len(ws.handles)})
+    if family == "carto":
+        ws.map_layers.append({"type": name, "args": args})
+        return ws.obs({"map": "updated", "layers": len(ws.map_layers)})
+    if family == "detector":
+        hs = args.get("handles") or ws.handles
+        if not hs:
+            raise ToolError(f"{name}: workspace empty")
+        for h in hs:
+            found = int(ws.rng.poisson(2.0))
+            ws.detections.setdefault(h, {})[name] = {"pred": found}
+        return ws.obs({"detector": name, "images": len(hs)})
+    if family == "terrain":
+        hs = args.get("handles") or ws.handles
+        if not hs:
+            raise ToolError(f"{name}: workspace empty")
+        for h in hs:
+            # full class-fraction dicts like classify_landcover (the
+            # evaluator aggregates every class across all entries),
+            # just coarser noise: generated terrain endpoints are the
+            # catalog's lower-fidelity tier
+            gt = w.images[h].landcover
+            noisy = {c: max(0.0, gt[c] + float(ws.rng.normal(0, 0.05)))
+                     for c in LANDCOVER_CLASSES}
+            z = sum(noisy.values()) or 1.0
+            ws.landcover[h] = {c: v / z for c, v in noisy.items()}
+        return ws.obs({"classified": len(hs), "model": name})
+    if family == "scene":
+        h = args.get("handle") or (ws.handles[0] if ws.handles else None)
+        if h is None or h not in w.images:
+            raise ToolError(f"{name}: no image handle")
+        words = w.images[h].caption.split()
+        kept = [wd for wd in words if ws.rng.random() > 0.4]
+        ws.last_answer = " ".join(kept or words[:3])
+        return ws.obs({"answer": ws.last_answer})
+    if family == "webnav":
+        ws.ui_state[name] = args
+        return ws.obs({"ok": True, "surface": name})
+    if family == "corpus":
+        titles = sorted(w.wiki)
+        title = titles[sum(ord(c) for c in name) % len(titles)]
+        words = w.wiki[title].split()
+        kept = [wd for wd in words if ws.rng.random() > 0.45]
+        ws.last_answer = " ".join(kept) if kept else title
+        return ws.obs({"article": title, "text": ws.last_answer[:200]})
+    if family == "audio":
+        clips = sorted(w.audio)
+        clip = clips[sum(ord(c) for c in name) % len(clips)]
+        words = w.audio[clip].split()
+        kept = [wd for wd in words if ws.rng.random() > 0.15]
+        ws.last_answer = " ".join(kept) if kept else w.audio[clip]
+        return ws.obs({"transcript": ws.last_answer})
+    if family == "notebook":
+        ws.artifacts.append({"op": name})
+        return ws.obs({"artifact": f"{name}_{len(ws.artifacts)}"})
+    raise ToolError(f"unknown tool family: {family}")
 
 
 # ===================================================== fused execution =====
@@ -410,13 +497,52 @@ TOOL_EFFECTS: Dict[str, ToolEffects] = {
 validate_effects(DEFAULT_REGISTRY, TOOL_EFFECTS)
 
 
+#: Per-family effects for generated catalog tools (core/catalog.py):
+#: every member of a family shares its footprint. The effects race
+#: detector runs a second pass over ``_execute_family`` keyed on this
+#: table (repro.analysis.effects_check with name_param="family"), so a
+#: family handler that drifts from its declaration fails the analyzer
+#: exactly like a hand-written tool would.
+CATALOG_FAMILY_EFFECTS: Dict[str, ToolEffects] = {
+    "catalogue": _eff(),
+    "ingest":    _eff(reads="handles", writes="handles"),
+    "carto":     _eff(writes="map"),
+    "detector":  _eff(reads="handles", writes="detections rng"),
+    "terrain":   _eff(reads="handles", writes="landcover rng"),
+    "scene":     _eff(reads="handles", writes="answer rng"),
+    "webnav":    _eff(writes="ui"),
+    "corpus":    _eff(writes="answer rng"),
+    "audio":     _eff(writes="answer rng"),
+    "notebook":  _eff(writes="artifacts"),
+}
+
+# the family specs (core/catalog.py) and this literal must agree — the
+# literal exists so the static analyzer can parse it, the spec so the
+# catalog module stays self-describing
+assert set(CATALOG_FAMILY_EFFECTS) == {f.name for f in FAMILIES}
+for _fam in FAMILIES:
+    assert CATALOG_FAMILY_EFFECTS[_fam.name] == _eff(_fam.reads,
+                                                     _fam.writes), _fam.name
+
+
 def tool_effects(name: str) -> ToolEffects:
-    """Effects lookup for the compiler; unknown tools raise ToolError
+    """Effects lookup for the compiler; generated catalog tools resolve
+    through their family footprint; unknown tools raise ToolError
     (mirrors ``execute_tool`` semantics at compile time)."""
-    try:
-        return TOOL_EFFECTS[name]
-    except KeyError:
-        raise ToolError(f"unknown tool: {name}")
+    eff = TOOL_EFFECTS.get(name)
+    if eff is not None:
+        return eff
+    family = family_of(name)
+    if family is not None:
+        return CATALOG_FAMILY_EFFECTS[family]
+    raise ToolError(f"unknown tool: {name}")
+
+
+def catalog_effects(registry: ToolRegistry) -> Dict[str, ToolEffects]:
+    """The exact per-tool effects table of a generated catalog registry
+    (base entries + family footprints) — what
+    ``core.tools.validate_effects`` checks 1:1 against the registry."""
+    return {name: tool_effects(name) for name in registry.tools}
 
 
 @dataclass(frozen=True)

@@ -179,6 +179,20 @@ def build_parser() -> argparse.ArgumentParser:
                          "schedule, like any co-tenancy change)")
     ap.add_argument("--draft-k", type=int, default=4,
                     help="draft tokens per speculative round (>= 1)")
+    ap.add_argument("--catalog-size", type=int, default=None,
+                    help="single-engine mode: serve against a generated "
+                         "tool catalog of N tools (core/catalog.py) "
+                         "instead of the base registry; needs "
+                         "--retriever-k (the launcher has no intent "
+                         "gate, so a scaled catalog is only servable "
+                         "through retrieval)")
+    ap.add_argument("--retriever-k", type=int, default=None,
+                    help="single-engine mode: retrieve a top-k toolset "
+                         "per request (core/retriever.py), register "
+                         "each toolset as a shared engine prefix, and "
+                         "prepend its catalog text to the prompt — "
+                         "requests retrieving the same toolset share "
+                         "one cached prefill")
     ap.add_argument("--trace-out", default="",
                     help="write the request-lifecycle trace here after "
                          "the run: .jsonl = compact record-per-line, "
@@ -214,6 +228,19 @@ def validate_args(ap: argparse.ArgumentParser, args):
     if args.sla_spill and args.replicas < 2:
         ap.error("--sla-spill needs --replicas >= 2 (router-level "
                  "spill has nowhere to go on one replica)")
+    if args.catalog_size is not None and args.catalog_size < 1:
+        ap.error(f"--catalog-size must be >= 1, got {args.catalog_size}")
+    if args.retriever_k is not None and args.retriever_k < 1:
+        ap.error(f"--retriever-k must be >= 1, got {args.retriever_k}")
+    if args.catalog_size is not None and args.retriever_k is None:
+        ap.error("--catalog-size needs --retriever-k: the launcher has "
+                 "no intent gate, so a scaled catalog is only servable "
+                 "through retrieved toolsets")
+    if args.retriever_k is not None and args.replicas > 1:
+        ap.error("--retriever-k applies to the single-engine prompt "
+                 "path; cluster mode serves the synthetic intent "
+                 "workload (examples/serve_pipeline.py runs retrieval "
+                 "against a cluster)")
     return args
 
 
@@ -236,6 +263,36 @@ def main(argv=None):
         serve_cluster(cfg, params, args, spec_decode=spec)
         return
 
+    prompts = [
+        f"Plot xview1 images around Tampa Bay with cloud cover below "
+        f"{10 + i}%" for i in range(args.requests)]
+    exposures = None
+    if args.retriever_k is not None:
+        from repro.core.catalog import (build_catalog,
+                                        catalog_intent_libraries)
+        from repro.core.retriever import ToolRetriever
+        from repro.core.tools import DEFAULT_REGISTRY
+        from repro.serving.tokenizer import TOKENIZER
+        registry = (build_catalog(args.catalog_size, seed=0)
+                    if args.catalog_size is not None
+                    else DEFAULT_REGISTRY)
+        retriever = ToolRetriever(registry,
+                                  catalog_intent_libraries(registry),
+                                  k=args.retriever_k)
+        exposures = retriever.retrieve_batch(prompts,
+                                             [None] * len(prompts))
+        prefix_texts = {e.key_str: e.catalog_text(registry)
+                        for e in exposures}
+        # the cache must hold the widest toolset prefix + the turn;
+        # grow it rather than refuse (register_prefix asserts the fit)
+        need = max((len(TOKENIZER.encode(t)) + 1
+                    for t in prefix_texts.values()), default=0)
+        need += args.max_new + 128
+        if args.cache_len < need:
+            print(f"cache-len {args.cache_len} -> {need} "
+                  f"(toolset prefixes need the room)")
+            args.cache_len = need
+
     tracer = Tracer() if args.trace_out else None
     engine = InferenceEngine(cfg, params, max_batch=args.max_batch,
                              cache_len=args.cache_len,
@@ -252,20 +309,35 @@ def main(argv=None):
                              # live latency numbers want real time
                              # (the engine binds it to the tracer too)
                              clock=time.time)
-    prompts = [
-        f"Plot xview1 images around Tampa Bay with cloud cover below "
-        f"{10 + i}%" for i in range(args.requests)]
     t0 = time.time()
-    for p in prompts:
-        engine.add_request(p, max_new_tokens=args.max_new,
-                           sampler=SamplerConfig(
-                               temperature=args.temperature, top_k=40))
+    if exposures is not None:
+        for key, text in prefix_texts.items():
+            engine.register_prefix(key, text)
+        for p, exp in zip(prompts, exposures):
+            engine.add_request(
+                f"{prefix_texts[exp.key_str]}\nTask: {p}",
+                max_new_tokens=args.max_new,
+                sampler=SamplerConfig(
+                    temperature=args.temperature, top_k=40),
+                prefix_key=exp.key_str)
+    else:
+        for p in prompts:
+            engine.add_request(p, max_new_tokens=args.max_new,
+                               sampler=SamplerConfig(
+                                   temperature=args.temperature,
+                                   top_k=40))
     done = engine.run_until_done()
     dt = time.time() - t0
     st = engine.throughput_stats()
     print(f"served {len(done)} requests in {dt:.2f}s | "
           f"decode steps {st['decode_steps']} | "
           f"{st['tokens_generated'] / max(dt, 1e-9):.1f} tok/s")
+    if exposures is not None:
+        print(f"retrieval[k={args.retriever_k}, "
+              f"catalog={len(registry.tools)} tools]: "
+              f"{len(prefix_texts)} toolset prefixes for "
+              f"{len(prompts)} requests | {st['prefix_hits']} prefix "
+              f"hits, {st['prefix_tokens_saved']} prefill tokens saved")
     if spec is not None:
         print(f"spec-decode[k={spec.k}]: {st['tokens_per_step']:.2f} "
               f"tokens/target-forward, accept rate "

@@ -257,6 +257,14 @@ class ClusterStats:
                      for r in self.per_replica)
         used = sum(r.get("kv_blocks_used_peak", 0)
                    for r in self.per_replica)
+        # toolset-retrieval prefixes (core/retriever.py): requests whose
+        # prompt prefix is a retrieved toolset ("toolset:<sha1>") rather
+        # than an intent — distinct keys vs turns served shows how much
+        # co-retrieval sharing the router preserved
+        toolset_turns = [t for t in self.traces
+                         if t.prefix_key is not None
+                         and t.prefix_key.startswith("toolset:")]
+        toolset_keys = {t.prefix_key for t in toolset_turns}
         return {
             "ticks": self.ticks,
             "requests": len(self.traces),
@@ -292,6 +300,8 @@ class ClusterStats:
                                     for r in self.per_replica),
             "kv_blocks_shared_peak": shared,
             "kv_shared_frac": round(shared / max(used, 1), 4),
+            "toolset_prefixes": len(toolset_keys),
+            "toolset_turns": len(toolset_turns),
             "per_replica": self.per_replica,
         }
 

@@ -79,7 +79,7 @@ class PipelineConfig:
 #   peak_concurrent/fused_sessions_peak — high-water gauges.
 _PIPE_COUNTERS = ("admitted", "gate_batches", "ticks", "engine_turns",
                   "fused_batches", "fused_calls", "plan_round_trips",
-                  "plan_virtual_steps")
+                  "plan_virtual_steps", "retrievals", "retrieval_widens")
 _PIPE_GAUGES = ("peak_concurrent", "fused_sessions_peak")
 
 
@@ -132,7 +132,9 @@ class PipelineStats:
                 "fused_calls": self.fused_calls,
                 "fused_sessions_peak": self.fused_sessions_peak,
                 "plan_round_trips": self.plan_round_trips,
-                "plan_virtual_steps": self.plan_virtual_steps}
+                "plan_virtual_steps": self.plan_virtual_steps,
+                "retrievals": self.retrievals,
+                "retrieval_widens": self.retrieval_widens}
 
 
 def _metric_prop(store: str, key: str) -> property:
@@ -166,6 +168,9 @@ class GeckOptPipeline:
         # tracer/metrics to correlate pipeline-level gate/plan/execute
         # spans with the per-request engine spans in one trace
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        if tracer is not None and agent.tracer is NULL_TRACER:
+            # surface the agent's retrieve/widen spans in the same trace
+            agent.tracer = tracer
         self.stats = PipelineStats(metrics)
         if engine is not None:
             # kernel backend rides in with the engine (see engine.py);
@@ -220,13 +225,37 @@ class GeckOptPipeline:
                 self.agent.apply_gate_result(session, intent, libs)
             self.tracer.end(h, tick=self.stats.ticks)
 
+    def _retrieve_wave(self, wave: List[AgentSession]):
+        """One batched retrieval per admission wave (the analogue of
+        ``_gate_wave``): every query's full-catalog ranking is computed
+        in ONE jitted scoring call, fused with the per-session gated
+        intent prior."""
+        ag = self.agent
+        if ag.exposure != "retrieved" or not wave:
+            return
+        h = self.tracer.begin("retrieve", tick=self.stats.ticks,
+                              group="pipeline", lane="retrieve",
+                              batch=len(wave))
+        exposures = ag.retriever.retrieve_batch(
+            [s.task.query for s in wave], [s.intent for s in wave])
+        for session, exposure in zip(wave, exposures):
+            ag.apply_retrieval_result(session, exposure)
+        self.stats.retrievals += len(wave)
+        self.tracer.end(h, tick=self.stats.ticks)
+
     def _mirror_to_engine(self, session: AgentSession):
         """Serve the session's first planner turn on the engine. All
         sessions gated to the same intent share one cached prefix
-        prefill (the gated system prompt + catalog)."""
+        prefill (the gated system prompt + catalog) — and with toolset
+        retrieval on, sessions retrieving the same toolset share one
+        prefix keyed by the canonical ``toolset_key`` (rendezvous-routed
+        across a cluster like an intent prefix)."""
         if self.engine is None or not self.config.engine_turns:
             return
-        key = f"planner:{session.intent or 'full-catalog'}"
+        if session.exposure is not None:
+            key = session.exposure.key_str
+        else:
+            key = f"planner:{session.intent or 'full-catalog'}"
         prefix_text = session.planner.serialize_prompt_prefix(
             session.catalog)
         if key not in self.engine.prefixes:
@@ -296,6 +325,7 @@ class GeckOptPipeline:
         while queue or active:
             wave = self._admit(queue, active)
             self._gate_wave(wave)
+            self._retrieve_wave(wave)
             for session in wave:
                 self._mirror_to_engine(session)
             active.extend(wave)
@@ -308,6 +338,8 @@ class GeckOptPipeline:
             finished = self._tick_sessions(active)
             for session in finished:
                 results[session.index] = session.result()
+                if session.exposure is not None:
+                    self.stats.retrieval_widens += session.exposure.widens
             done_ids = {id(s) for s in finished}
             active = [s for s in active if id(s) not in done_ids]
         if self.engine is not None:

@@ -1,0 +1,278 @@
+"""Tool-catalog scaling + semantic retrieval (core/catalog.py,
+core/retriever.py): deterministic catalog generation, retrieval
+ranking, miss-and-widen fallback, toolset prefix sharing on the engine,
+and the bitwise-outcome invariant the whole layer rests on.
+"""
+import copy
+import json
+import os
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks.check_regression import compare
+from benchmarks.retrieval_bench import _outcome_fingerprint
+from repro.analysis.effects_check import analyze_effects
+from repro.configs import get_smoke_config
+from repro.core.agent import Agent
+from repro.core.catalog import (FAMILIES, build_catalog,
+                                catalog_intent_libraries,
+                                catalog_intent_map, family_of)
+from repro.core.gate import IntentGate, ScriptedIntentClassifier
+from repro.core.planner import PlannerConfig
+from repro.core.retriever import ToolRetriever, ToolsetExposure
+from repro.core.tools import DEFAULT_REGISTRY
+from repro.env.tools_impl import (CATALOG_FAMILY_EFFECTS, Workspace,
+                                  catalog_effects, execute_tool)
+from repro.env.tasks import make_benchmark
+from repro.env.world import build_world
+from repro.models.model import init_params
+from repro.serving.engine import InferenceEngine
+from repro.serving.pipeline import GeckOptPipeline, PipelineConfig
+
+SIZES = (8, 32, 128, 512)
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+TOOLS_IMPL = (Path(__file__).parent.parent / "src" / "repro" / "env"
+              / "tools_impl.py")
+
+
+@pytest.fixture(scope="module")
+def world():
+    return build_world(0)
+
+
+@pytest.fixture(scope="module")
+def tasks(world):
+    return make_benchmark(world, 10, seed=0)
+
+
+def _agent(world, registry, exposure, acc=0.97, k=8, seed=0):
+    imap = catalog_intent_map(registry)
+    gate = IntentGate(imap, ScriptedIntentClassifier(
+        acc, np.random.default_rng(seed)), registry.libraries())
+    retriever = (ToolRetriever(registry,
+                               catalog_intent_libraries(registry), k=k)
+                 if exposure == "retrieved" else None)
+    return Agent(registry, world,
+                 PlannerConfig(mode="react", few_shot=False),
+                 gate=gate, seed=seed, retriever=retriever,
+                 exposure=exposure)
+
+
+# ------------------------------------------------------------ catalog ----
+
+def test_catalog_deterministic_and_sized():
+    for n in (1, 8, 48, 128, 512):
+        a, b = build_catalog(n, seed=0), build_catalog(n, seed=0)
+        assert len(a.tools) == n
+        assert a.catalog_text() == b.catalog_text()
+    # n <= base: a registration-order prefix of the hand-written registry
+    base_order = list(DEFAULT_REGISTRY.tools)
+    assert list(build_catalog(8).tools) == base_order[:8]
+    # past the base, every family contributes
+    big = build_catalog(512, seed=0)
+    libs = set(big.libraries())
+    for fam in FAMILIES:
+        assert fam.library in libs
+
+
+def test_catalog_intent_libraries_track_presence():
+    for n in SIZES:
+        reg = build_catalog(n, seed=0)
+        present = set(reg.libraries())
+        for intent, lib_names in catalog_intent_libraries(reg).items():
+            assert lib_names, intent
+            assert set(lib_names) <= present
+
+
+def test_generated_tools_execute_and_declare_effects(world):
+    reg = build_catalog(512, seed=0)
+    effects = catalog_effects(reg)
+    assert set(effects) == set(reg.tools)
+    # one member of each family actually dispatches against a workspace
+    done = set()
+    for name in reg.tools:
+        fam = family_of(name)
+        if fam is None or fam in done:
+            continue
+        ws = Workspace(world, np.random.default_rng(0),
+                       handles=sorted(world.images)[:2])
+        obs = execute_tool(ws, name, {"handles": ws.handles})
+        assert isinstance(obs, str) and obs
+        done.add(fam)
+    assert done == set(CATALOG_FAMILY_EFFECTS)
+
+
+# ---------------------------------------------------------- retrieval ----
+
+def test_ranking_deterministic_and_batch_matches_single():
+    reg = build_catalog(128, seed=0)
+    r = ToolRetriever(reg, catalog_intent_libraries(reg), k=8)
+    queries = ["plot xview1 images near Tampa Bay",
+               "how many ships are in the harbor",
+               "transcribe the briefing recording"]
+    intents = ["load_filter_plot", "detection_analysis", None]
+    batch = r.rank_batch(queries, intents)
+    for q, it, ranked in zip(queries, intents, batch):
+        assert ranked == r.rank(q, it)            # batch == single
+        assert ranked == r.rank(q, it)            # and stable
+        assert sorted(ranked) == sorted(reg.tools)  # a full permutation
+
+
+def test_exposure_key_and_widen_semantics():
+    reg = build_catalog(64, seed=0)
+    r = ToolRetriever(reg, catalog_intent_libraries(reg), k=4)
+    exp = r.retrieve("count the images", "load_filter_plot")
+    assert exp.k == 4 and exp.exposed == tuple(sorted(exp.ranking[:4]))
+    assert exp.key_str.startswith("toolset:")
+    # same toolset from a different exposure object -> same prefix key
+    assert exp.key_str == ToolsetExposure(list(exp.ranking), 4).key_str
+    exp.widen_once()
+    assert (exp.k, exp.widens) == (8, 1)
+    exp.widen_full()
+    assert exp.k == len(reg.tools)
+    # at k == n the serialized subset IS the full catalog, byte-for-byte
+    assert exp.catalog_text(reg) == reg.catalog_text()
+    # k0 clamps to the catalog size
+    assert ToolsetExposure(list(exp.ranking), 10_000).k == len(reg.tools)
+
+
+def test_agent_exposure_validation(world):
+    with pytest.raises(ValueError):
+        Agent(DEFAULT_REGISTRY, world, PlannerConfig(),
+              exposure="retrieved")
+    with pytest.raises(AssertionError):
+        Agent(DEFAULT_REGISTRY, world, PlannerConfig(),
+              exposure="bogus")
+
+
+# -------------------------------------------------- outcome invariance ----
+
+@pytest.mark.parametrize("acc", [0.0, 0.5, 0.97])
+def test_outcomes_bitwise_identical_across_exposures(world, tasks, acc):
+    """The planner's decision stream reads the gated visible toolset,
+    never the serialized catalog text — so retrieval (even under a
+    fully wrong gate, where every task takes the fallback) replays the
+    all-tools run bitwise."""
+    reg = build_catalog(128, seed=0)
+    all_res = [_agent(world, reg, "all", acc=acc)
+               .run_task(t, task_seed=i) for i, t in enumerate(tasks)]
+    ret_res = [_agent(world, reg, "retrieved", acc=acc)
+               .run_task(t, task_seed=i) for i, t in enumerate(tasks)]
+    for a, b in zip(all_res, ret_res):
+        assert _outcome_fingerprint(a) == _outcome_fingerprint(b)
+        assert b.toolset is not None and a.toolset is None
+
+
+def test_miss_and_widen_recovers_and_charges(world, tasks):
+    """k=1 guarantees misses: widening must recover every executed tool
+    without touching outcomes, and each escalation must be charged to
+    the ledger as a 'widen' entry."""
+    reg = build_catalog(128, seed=0)
+    base = [_agent(world, reg, "all").run_task(t, task_seed=i)
+            for i, t in enumerate(tasks)]
+    tiny = [_agent(world, reg, "retrieved", k=1).run_task(t, task_seed=i)
+            for i, t in enumerate(tasks)]
+    assert sum(r.widens for r in tiny) > 0
+    for a, b in zip(base, tiny):
+        assert _outcome_fingerprint(a) == _outcome_fingerprint(b)
+        assert b.ledger.summary()["widens"] == b.widens
+        widen_entries = [e for e in b.ledger.entries
+                        if e.kind == "widen"]
+        assert len(widen_entries) == b.widens
+        # escalations cost tokens but no planner round-trips
+        assert all(e.prompt_tokens > 0 and e.tool_calls == 0
+                   for e in widen_entries)
+
+
+def test_pipeline_retrieval_matches_sequential(world, tasks):
+    reg = build_catalog(96, seed=0)
+    solo = [_agent(world, reg, "retrieved").run_task(t, task_seed=i)
+            for i, t in enumerate(tasks)]
+    pipe = GeckOptPipeline(
+        _agent(world, reg, "retrieved"),
+        PipelineConfig(max_concurrent=4, engine_turns=False))
+    fused = pipe.run(tasks)
+    assert pipe.stats.summary()["retrievals"] == len(tasks)
+    assert (pipe.stats.summary()["retrieval_widens"]
+            == sum(r.widens for r in fused))
+    for s, f in zip(solo, fused):
+        # batched wave retrieval == per-task retrieval, down to tokens
+        assert s.toolset == f.toolset
+        assert _outcome_fingerprint(s) == _outcome_fingerprint(f)
+        assert s.ledger.total_tokens == f.ledger.total_tokens
+
+
+# ------------------------------------------- engine prefix sharing ----
+
+@pytest.mark.parametrize("kv_mode", ["dense", "paged"])
+def test_toolset_prefix_sharing_on_engine(world, kv_mode):
+    cfg = get_smoke_config("planner-proxy-100m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = InferenceEngine(cfg, params, max_batch=4, cache_len=4096,
+                             kv_mode=kv_mode)
+    reg = build_catalog(64, seed=0)
+    tasks16 = make_benchmark(world, 16, seed=0)
+    pipe = GeckOptPipeline(_agent(world, reg, "retrieved", k=8),
+                           PipelineConfig(max_concurrent=8),
+                           engine=engine)
+    results = pipe.run(tasks16)
+    assert len(results) == 16
+    keys = set(engine.prefixes)
+    assert keys and all(k.startswith("toolset:") for k in keys)
+    # tasks retrieving the same toolset share one prefix prefill
+    assert len(keys) < 16
+    st = engine.throughput_stats()
+    assert st["prefix_hits"] == 16
+    assert st["prefix_tokens_saved"] > 0
+    if kv_mode == "paged":
+        # shared prefixes are CoW block refs, not copies
+        assert st["kv_shared_frac"] > 0
+
+
+# --------------------------------------------------- CI gate plumbing ----
+
+def _load_baseline():
+    path = os.path.join(RESULTS, "retrieval_bench_tiny.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_retrieval_regression_gate_is_not_vacuous():
+    base = _load_baseline()
+    assert compare("retrieval", base, base)[0] == []
+    worse = copy.deepcopy(base)
+    worse["meta"]["token_savings_512"] -= 0.2      # tol is 0.05
+    assert compare("retrieval", worse, base)[0] == ["token_savings_512"]
+    broken = copy.deepcopy(base)
+    broken["meta"]["outcomes_identical"] = False   # equality-gated
+    assert compare("retrieval", broken, base)[0] == ["outcomes_identical"]
+    better = copy.deepcopy(base)
+    better["meta"]["recall_at_k"] = 1.0
+    assert compare("retrieval", better, base)[0] == []
+
+
+def test_family_effects_analyzer_pass_not_vacuous():
+    """The CATALOG_FAMILY_EFFECTS pass of the effects race detector:
+    clean on the real source, and a family whose declaration is dropped
+    fails the sweep (so growing the catalog can't open a coverage gap)."""
+    source = TOOLS_IMPL.read_text()
+    names = [f.name for f in FAMILIES]
+    clean = analyze_effects(Path("tools_impl.py"), source,
+                            registry_names=names,
+                            table_name="CATALOG_FAMILY_EFFECTS",
+                            name_param="family")
+    assert [f for f in clean if f.rule.startswith("RL0")] == []
+    # drop the terrain declaration: the dispatch branch still exists,
+    # so the analyzer must flag the undeclared family
+    broken = source.replace(
+        '    "terrain":   _eff(reads="handles", writes="landcover rng"),',
+        "")
+    assert broken != source, "perturbation did not match the source"
+    findings = analyze_effects(Path("tools_impl.py"), broken,
+                               registry_names=names,
+                               table_name="CATALOG_FAMILY_EFFECTS",
+                               name_param="family")
+    assert any("terrain" in f.message for f in findings), findings
